@@ -1,0 +1,35 @@
+"""Paper Fig. 6: effective memory bandwidth vs problem size (r = 0 copy).
+
+Finds the minimum problem size that saturates effective bandwidth — the
+paper's protocol for choosing its 64/128 MiB benchmark sizes. On this CPU
+container the measured GB/s is host bandwidth; the derived column also
+reports the TPU-roofline time for the same transfer (2·bytes / 819 GB/s)
+so the table is portable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.core.rooflinelib import TPU_V5E
+from repro.kernels import ops
+
+
+def run(full: bool = False) -> None:
+    sizes_mib = (1, 4, 16, 64) if not full else (1, 2, 4, 8, 16, 32, 64, 128)
+    g = jnp.ones((1,), jnp.float32)  # r = 0: f'_i = f_i
+    for mib in sizes_mib:
+        n = mib * 1024 * 1024 // 4
+        f = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+        t = time_fn(
+            lambda f=f: ops.xcorr1d(f, g, strategy="hwc"), warmup=2, iters=5
+        )
+        nbytes = 2 * n * 4  # read + write once
+        gbps = nbytes / t / 1e9
+        tpu_t = nbytes / TPU_V5E.hbm_bw
+        emit(
+            f"fig06/bandwidth/{mib}MiB",
+            t,
+            f"measured_GBps={gbps:.1f};tpu_roofline_s={tpu_t:.2e}",
+        )

@@ -1,0 +1,38 @@
+"""Paper Fig. 7: 1-D cross-correlation via the vendor library.
+
+The cuDNN/MIOpen analogue on our stack is XLA's native convolution
+primitive (lax.conv_general_dilated) — the "let the library choose the
+algorithm" path, against which the hand-tuned kernels of Fig. 8 are
+compared.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+
+
+def conv_library(f, g):
+    # NCW layout, single batch/channel — the paper's 1-D setup.
+    return jax.lax.conv_general_dilated(
+        f[None, None, :], g[None, None, :],
+        window_strides=(1,), padding="VALID",
+    )[0, 0]
+
+
+def run(full: bool = False) -> None:
+    n = (64 if full else 4) * 1024 * 1024 // 4
+    rng = np.random.default_rng(0)
+    radii = (1, 4, 16, 64, 256, 1024) if full else (1, 16, 256)
+    jitted = jax.jit(conv_library)
+    for r in radii:
+        f = jnp.asarray(rng.standard_normal(n + 2 * r), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(2 * r + 1), jnp.float32)
+        t = time_fn(jitted, f, g)
+        updates_per_s = n / t
+        emit(
+            f"fig07/xcorr_library/r{r}", t,
+            f"Mupdates_per_s={updates_per_s/1e6:.1f}",
+        )

@@ -1,0 +1,39 @@
+"""Paper Fig. 8: hand-tuned 1-D cross-correlation, HWC vs SWC, vs radius.
+
+HWC = pure-jnp shifted multiply-accumulate (XLA owns residency);
+SWC = the Pallas kernel (explicit VMEM blocks; interpret mode on CPU).
+The derived column reports the bandwidth-bound roofline time on TPU
+constants — the paper's observation (bandwidth-bound at small r,
+cache-bound at large r) is reproduced structurally in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.core.rooflinelib import TPU_V5E
+from repro.kernels import ops
+
+
+def run(full: bool = False) -> None:
+    n = (16 if full else 1) * 1024 * 1024 // 4
+    rng = np.random.default_rng(0)
+    radii = (1, 4, 16, 64, 256, 1024) if full else (1, 16, 128)
+    for r in radii:
+        f = jnp.asarray(rng.standard_normal(n + 2 * r), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(2 * r + 1), jnp.float32)
+        roof_t = (2 * n * 4) / TPU_V5E.hbm_bw  # read+write once
+        for strat in ("hwc", "baseline"):
+            label = {"hwc": "hwc", "baseline": "swc"}[strat]
+            t = time_fn(
+                lambda f=f, g=g, s=strat: ops.xcorr1d(
+                    f, g, strategy=s, block_size=4096
+                ),
+                iters=3,
+            )
+            emit(
+                f"fig08/xcorr_{label}/r{r}", t,
+                f"tpu_bw_bound_s={roof_t:.2e};"
+                f"flops_per_byte={(2 * (2 * r + 1)) / 8:.1f}",
+            )

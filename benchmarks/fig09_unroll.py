@@ -1,0 +1,28 @@
+"""Paper Fig. 9: tuning-strategy comparison for the hand-written kernel —
+baseline (1 output/thread, rolled MAC), element-wise unrolling (4
+adjacent outputs reuse each coefficient), stencil-point-wise unrolling
+(MAC loop unrolled ×4). Same three strategies, TPU block terms."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.kernels import ops
+
+
+def run(full: bool = False) -> None:
+    n = (16 if full else 1) * 1024 * 1024 // 4
+    rng = np.random.default_rng(0)
+    radii = (4, 64, 512) if full else (4, 64)
+    for r in radii:
+        f = jnp.asarray(rng.standard_normal(n + 2 * r), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(2 * r + 1), jnp.float32)
+        for strat in ("baseline", "elementwise", "pointwise"):
+            t = time_fn(
+                lambda f=f, g=g, s=strat: ops.xcorr1d(
+                    f, g, strategy=s, block_size=4096, unroll=4
+                ),
+                iters=3,
+            )
+            emit(f"fig09/{strat}/r{r}", t, "unroll=4")

@@ -1,0 +1,55 @@
+"""Paper Fig. 10: diffusion equation via tensor-library primitives (the
+PyTorch-path analogue): XLA's conv_general_dilated in 1/2/3-D, radius
+sweep — the "transfer the tuning burden to the library" strategy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.core.stencil import central_difference_coeffs
+
+
+def _conv_nd(f, g, ndim):
+    dn = jax.lax.conv_dimension_numbers(
+        f.shape, g.shape,
+        ("NCDHW"[: ndim + 2], "OIDHW"[: ndim + 2], "NCDHW"[: ndim + 2]),
+    )
+    return jax.lax.conv_general_dilated(
+        f, g, window_strides=(1,) * ndim, padding="VALID",
+        dimension_numbers=dn,
+    )
+
+
+def run(full: bool = False) -> None:
+    shapes = {
+        1: (1 << (22 if full else 18),),
+        2: ((2048, 2048) if full else (256, 256)),
+        3: ((256, 256, 256) if full else (48, 48, 48)),
+    }
+    rng = np.random.default_rng(0)
+    for ndim, shape in shapes.items():
+        for acc in ((2, 4, 8) if full else (2, 6)):
+            r = acc // 2
+            c2 = central_difference_coeffs(2, acc)
+            # separable laplacian as a dense nd kernel (library path)
+            k = np.zeros((2 * r + 1,) * ndim)
+            for ax in range(ndim):
+                idx = [r] * ndim
+                for j, cj in enumerate(c2):
+                    idx[ax] = j
+                    k[tuple(idx)] += cj
+            idx = (r,) * ndim
+            k[idx] += 1.0  # merged identity (paper Eq. 5)
+            fp = jnp.asarray(
+                rng.standard_normal([s + 2 * r for s in shape]), jnp.float32
+            )[None, None]
+            g = jnp.asarray(k, jnp.float32)[None, None]
+            jitted = jax.jit(lambda f, g, nd=ndim: _conv_nd(f, g, nd))
+            t = time_fn(jitted, fp, g, iters=3)
+            n = int(np.prod(shape))
+            emit(
+                f"fig10/diffusion_library/{ndim}d_r{r}", t,
+                f"Mupdates_per_s={n / t / 1e6:.1f}",
+            )

@@ -1,0 +1,34 @@
+"""Paper Figs. 11-12: diffusion equation with the fused stencil engine,
+1/2/3-D, radius (accuracy) sweep, HWC vs SWC strategies."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.core.rooflinelib import TPU_V5E
+from repro.physics.diffusion import DiffusionProblem
+
+
+def run(full: bool = False) -> None:
+    shapes = {
+        1: (1 << (22 if full else 18),),
+        2: ((2048, 2048) if full else (256, 256)),
+        3: ((256,) * 3 if full else (32, 32, 64)),
+    }
+    for ndim, shape in shapes.items():
+        for acc in ((2, 4, 6, 8) if full else (2, 6)):
+            p = DiffusionProblem(shape, accuracy=acc)
+            f0 = p.init_field()
+            n = int(np.prod(shape))
+            roof = 2 * n * 4 / TPU_V5E.hbm_bw
+            strategies = ["hwc"] + (["swc"] if ndim == 3 else [])
+            for strat in strategies:
+                op = p.step_op(strat, block=(8, 8, 64))
+                jitted = jax.jit(op)
+                t = time_fn(jitted, f0, iters=3)
+                emit(
+                    f"fig11/diffusion_fused/{ndim}d_r{p.radius}_{strat}", t,
+                    f"Mupdates_per_s={n / t / 1e6:.1f};"
+                    f"tpu_bw_bound_s={roof:.2e}",
+                )

@@ -1,0 +1,41 @@
+"""Paper Fig. 13: MHD integration substep, tuning-strategy comparison.
+
+Strategies: HWC (XLA-managed), SWC (Pallas pipelined blocks), SWC-stream
+(paper Fig. 5b explicit z-streaming), and the beyond-paper fused-RK-axpy
+variant. Derived column: fraction of the paper's 'ideal performance'
+(domain read+written exactly once at peak BW — Sec. 5.4) achieved on TPU
+roofline terms.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.util import emit, time_fn
+from repro.core.rooflinelib import TPU_V5E, stencil_ideal_bytes
+from repro.physics.mhd import MHDSolver, N_FIELDS
+
+
+def run(full: bool = False) -> None:
+    n = 64 if full else 24
+    shape = (n, n, n)
+    cases = [
+        ("hwc", dict(strategy="hwc", fuse_rk_axpy=False)),
+        ("swc", dict(strategy="swc", fuse_rk_axpy=False)),
+        ("swc_stream", dict(strategy="swc_stream", fuse_rk_axpy=False)),
+        ("hwc_fused_axpy", dict(strategy="hwc", fuse_rk_axpy=True)),
+    ]
+    npoints = float(np.prod(shape))
+    ideal = stencil_ideal_bytes(npoints, N_FIELDS, N_FIELDS, 4) / TPU_V5E.hbm_bw
+    for label, kw in cases:
+        solver = MHDSolver(shape, block=(8, 8, min(n, 64)), **kw)
+        f0 = solver.init_fields()
+        dt = 1e-6  # paper Table B2: benchmark dt ≈ machine epsilon
+        substep = jax.jit(lambda f, s=solver: s.step(f, dt))
+        t = time_fn(substep, f0, iters=3, warmup=1)
+        t_sub = t / 3.0  # paper reports per RK substep
+        emit(
+            f"fig13/mhd_{label}/{n}cubed", t_sub,
+            f"Mupdates_per_s={npoints / t_sub / 1e6:.2f};"
+            f"ideal_tpu_s_per_substep={ideal:.2e}",
+        )

@@ -1,0 +1,39 @@
+"""Paper Fig. 14 / C1: tuning-parameter exploration — block-shape sweep
+for the fused 3-D kernel (the __launch_bounds__/thread-block analogue on
+TPU), via the autotune harness: structural cost-model ranking + measured
+timing of the top candidates."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.util import emit
+from repro.core.autotune import enumerate_candidates, time_candidate
+from repro.physics.mhd import MHDSolver, N_FIELDS
+
+
+def run(full: bool = False) -> None:
+    n = 32 if full else 16
+    shape = (n, n, n)
+    cands = enumerate_candidates(
+        shape, (3, 3, 3), N_FIELDS, N_FIELDS, 4,
+        tx_options=(16, 32, 64) if not full else (32, 64, 128),
+        ty_options=(4, 8, 16),
+        tz_options=(4, 8, 16),
+    )
+    solver0 = MHDSolver(shape, strategy="swc")
+    f0 = solver0.init_fields()
+    import jax
+
+    for cand in cands[: (8 if full else 4)]:
+        solver = MHDSolver(shape, strategy="swc", block=cand.block)
+        rhs = jax.jit(solver.rhs)
+        try:
+            t = time_candidate(lambda: rhs(f0), warmup=1, iters=3)
+        except Exception:
+            continue  # discarded launch (paper protocol)
+        emit(
+            f"fig14/blocktune/{'x'.join(map(str, cand.block))}", t,
+            f"vmem_KiB={cand.vmem_bytes // 1024};"
+            f"halo_overhead={cand.halo_overhead:.2f};"
+            f"model_score={cand.score:.3f}",
+        )

@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if x is not None else "—"
+
+
+def dryrun_table(rows) -> str:
+    out = [
+        "| arch | shape | mesh | status | compile s | args GiB/chip | temp GiB/chip |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "ok":
+            mem = r.get("memory", {})
+            gib = 1024**3
+            args_g = mem.get("argument_size_in_bytes", 0) / gib
+            temp_g = mem.get("temp_size_in_bytes", 0) / gib
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r['compile_s']} | {args_g:.2f} | {temp_g:.2f} |"
+            )
+        else:
+            status = r.get("status", "?")
+            short = status if len(status) < 48 else status[:45] + "..."
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {short} "
+                f"| — | — | — |"
+            )
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = [
+        "| arch | shape | compute s | memory s (model) | memory s (HLO-UB) "
+        "| collective s | dominant | useful-FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok" or r.get("mesh") != "single":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_e(r['compute_s'])} "
+            f"| {fmt_e(r['memory_s'])} | {fmt_e(r.get('memory_s_hlo_upper'))} "
+            f"| {fmt_e(r['collective_s'])} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def collective_summary(rows) -> str:
+    out = [
+        "| arch | shape | AG | AR | RS | A2A | CP | wire GiB/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok" or r.get("mesh") != "single":
+            continue
+        c = r.get("coll_counts", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {c.get('all-gather', 0)} "
+            f"| {c.get('all-reduce', 0)} | {c.get('reduce-scatter', 0)} "
+            f"| {c.get('all-to-all', 0)} | {c.get('collective-permute', 0)} "
+            f"| {r['coll_wire_bytes'] / 1024**3:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    rows = json.load(open(path))
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    fail = [r for r in rows if r.get("status") == "FAIL"]
+    skip = sum(
+        1 for r in rows
+        if r.get("status") not in ("ok", "FAIL")
+    )
+    print(f"## Dry-run matrix ({ok} ok / {skip} documented skips / "
+          f"{len(fail)} failed)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline terms (single-pod, 256 chips)\n")
+    print(roofline_table(rows))
+    print("\n## Collective inventory (single-pod)\n")
+    print(collective_summary(rows))
+    if fail:
+        print("\n## Failures\n")
+        for r in fail:
+            print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: {r['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-sized
+    PYTHONPATH=src python -m benchmarks.run --only fig13
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+
+from benchmarks.util import header
+
+MODULES = (
+    "fig06_bandwidth",
+    "fig07_xcorr_library",
+    "fig08_xcorr_tuned",
+    "fig09_unroll",
+    "fig10_diffusion_xla",
+    "fig11_diffusion_fused",
+    "fig13_mhd",
+    "fig14_blocktune",
+    "table3_energy",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized problems (hours on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+    header()
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        mod.run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark utilities: timing protocol (paper Sec. 5.1 — warm-up, then
+median of timed iterations, explicit synchronization) and CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call, block_until_ready-synchronized."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """``name,us_per_call,derived`` CSV row (assignment contract)."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

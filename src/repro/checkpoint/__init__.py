@@ -1,0 +1,3 @@
+"""Checkpoint substrate: async atomic saves, keep-k retention, elastic
+restore onto any mesh."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

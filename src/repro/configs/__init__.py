@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned arch (exact public
+configs) + the paper's own stencil cases. See registry.py for lookup."""

@@ -1,0 +1,67 @@
+"""Boundary value functions β(f, i) — paper Eq. 2.
+
+The augmented array f̂ extends the computational domain by the stencil
+influence radius. Supported boundary families map to the padding modes
+used by the paper's test problems (periodic 2π domains for diffusion/MHD)
+plus the usual PDE suspects.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+_MODES = ("periodic", "dirichlet", "neumann", "reflect")
+
+
+def pad(
+    f: jnp.ndarray,
+    radius: int | Sequence[int],
+    mode: str = "periodic",
+    *,
+    spatial_axes: Sequence[int] | None = None,
+    value: float = 0.0,
+) -> jnp.ndarray:
+    """Construct f̂ by padding ``f`` with ``radius`` ghost cells per
+    spatial axis.
+
+    ``spatial_axes`` defaults to all axes. ``radius`` may be per-axis.
+    Modes:
+      * ``periodic`` — wrap (the paper's simulation setup);
+      * ``dirichlet`` — constant ``value``;
+      * ``neumann``   — zero-gradient (edge replicate);
+      * ``reflect``   — mirror about the boundary cell.
+    """
+    if mode not in _MODES:
+        raise ValueError(f"unknown boundary mode {mode!r}; want one of {_MODES}")
+    axes = tuple(range(f.ndim)) if spatial_axes is None else tuple(spatial_axes)
+    if isinstance(radius, int):
+        radius = [radius] * len(axes)
+    if len(radius) != len(axes):
+        raise ValueError("radius/spatial_axes length mismatch")
+    pad_width = [(0, 0)] * f.ndim
+    for a, r in zip(axes, radius):
+        pad_width[a] = (int(r), int(r))
+    if mode == "periodic":
+        return jnp.pad(f, pad_width, mode="wrap")
+    if mode == "dirichlet":
+        return jnp.pad(f, pad_width, mode="constant", constant_values=value)
+    if mode == "neumann":
+        return jnp.pad(f, pad_width, mode="edge")
+    return jnp.pad(f, pad_width, mode="reflect")
+
+
+def unpad(
+    f: jnp.ndarray,
+    radius: int | Sequence[int],
+    *,
+    spatial_axes: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Inverse of :func:`pad` — strip ghost cells."""
+    axes = tuple(range(f.ndim)) if spatial_axes is None else tuple(spatial_axes)
+    if isinstance(radius, int):
+        radius = [radius] * len(axes)
+    slicer: list[slice] = [slice(None)] * f.ndim
+    for a, r in zip(axes, radius):
+        slicer[a] = slice(int(r), f.shape[a] - int(r)) if r else slice(None)
+    return f[tuple(slicer)]

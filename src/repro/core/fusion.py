@@ -1,0 +1,131 @@
+"""FusedStencilOp — the paper's contribution as a composable JAX module.
+
+A fused stencil operation is the paper's chain φ(γ(ψ(f))) (Sec. 3.3):
+
+  ψ  pad the spatial dimensions (boundary module),
+  γ  evaluate ALL linear stencil operators for ALL fields — conceptually
+     Q = A·B with A ∈ R^{n_s×n_k}, B ∈ R^{n_k×n_f} per point (Eq. 8),
+  φ  nonlinear point-wise map producing the n_out field updates (Eq. 9).
+
+``strategy`` selects the caching regime evaluated by the paper:
+
+  * ``hwc``        — pure jnp; the compiler (XLA) owns on-chip residency
+                     (the hardware-managed-cache analogue);
+  * ``swc``        — Pallas kernel, VMEM residency owned by us, blocks
+                     auto-pipelined (paper Fig. 5a on TPU);
+  * ``swc_stream`` — Pallas kernel, explicit z-streaming with carried
+                     halo + prefetch DMA (paper Fig. 5b on TPU).
+
+The same object also runs *distributed* over a device mesh: the domain is
+decomposed over mesh axes and halos are exchanged with collective
+permutes before each application (`apply_sharded`), which is the
+shard_map analogue of Astaroth's MPI halo exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import boundary
+from repro.core.halo import exchange_halos_nd
+from repro.core.stencil import OperatorSet
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Phi = Callable[[Mapping[str, jnp.ndarray]], jnp.ndarray]
+
+STRATEGIES = ("hwc", "swc", "swc_stream")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedStencilOp:
+    """One fused update step over an (n_f, *spatial) field stack."""
+
+    ops: OperatorSet
+    phi: Phi
+    n_out: int
+    boundary_mode: str = "periodic"
+    strategy: str = "hwc"
+    block: tuple[int, int, int] = (8, 8, 128)
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"strategy {self.strategy!r} not in {STRATEGIES}"
+            )
+
+    @property
+    def radius_per_axis(self) -> tuple[int, ...]:
+        return self.ops.radius_per_axis()
+
+    # -- single device ------------------------------------------------------
+
+    def apply_padded(
+        self, f_padded: jnp.ndarray, aux: jnp.ndarray | None = None
+    ) -> jnp.ndarray:
+        """Apply to an already-padded field stack (ghost cells present).
+
+        ``aux`` (n_aux, *interior): extra point-wise inputs forwarded to
+        φ (fused axpy / RK carries — beyond-paper extension)."""
+        ndim = self.ops.ndim
+        if ndim == 3 and self.strategy in ("swc", "swc_stream"):
+            return kops.fused_stencil3d(
+                f_padded, self.ops, self.phi, self.n_out, aux=aux,
+                strategy=self.strategy, block=self.block,
+            )
+        # hwc path — and the general-rank fallback for 1-D/2-D domains,
+        # where XLA's fusion already achieves the paper's HWC behaviour.
+        return kref.fused_stencil(f_padded, self.ops, self.phi, aux=aux)
+
+    def __call__(
+        self, f: jnp.ndarray, aux: jnp.ndarray | None = None
+    ) -> jnp.ndarray:
+        """ψ then φ(A·B): pad with the boundary function and apply."""
+        rads = self.radius_per_axis
+        fp = boundary.pad(
+            f, rads, self.boundary_mode,
+            spatial_axes=range(1, f.ndim),
+        )
+        return self.apply_padded(fp, aux=aux)
+
+    # -- distributed --------------------------------------------------------
+
+    def apply_sharded(
+        self,
+        f_local: jnp.ndarray,
+        mesh_axes: Sequence[str | None],
+        aux: jnp.ndarray | None = None,
+    ) -> jnp.ndarray:
+        """Apply inside ``shard_map``: exchange halos over the mesh axes
+        assigned to each spatial dimension, then run the local fused
+        kernel. ``mesh_axes[a]`` names the mesh axis sharding spatial axis
+        ``a`` (None = unsharded → local boundary padding).
+
+        Periodic boundaries compose exactly with the ring permute: the
+        wrap-around neighbor IS the periodic image.
+        """
+        if self.boundary_mode != "periodic":
+            raise NotImplementedError(
+                "sharded stencils currently support periodic boundaries "
+                "(the paper's simulation setup)"
+            )
+        fp = exchange_halos_nd(
+            f_local, self.radius_per_axis, mesh_axes,
+            spatial_axes=tuple(range(1, f_local.ndim)),
+        )
+        return self.apply_padded(fp, aux=aux)
+
+
+def integrate(
+    op: FusedStencilOp, f0: jnp.ndarray, n_steps: int
+) -> jnp.ndarray:
+    """Iterate f ← φ(A·B(ψ(f))) with lax control flow (paper Fig. 1)."""
+
+    def body(f, _):
+        return op(f), None
+
+    out, _ = jax.lax.scan(body, f0, None, length=n_steps)
+    return out

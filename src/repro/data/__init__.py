@@ -1,0 +1,8 @@
+"""Data substrate: deterministic synthetic datasets + host-sharded batch
+iterator (the stand-in for a production tokenized-shard loader)."""
+from repro.data.pipeline import (  # noqa: F401
+    BatchIterator,
+    MarkovLMDataset,
+    SyntheticLMDataset,
+    make_physics_init,
+)

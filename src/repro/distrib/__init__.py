@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules (DP/FSDP/TP/EP/SP), activation
+constraints, microbatching, and gradient synchronization policies."""

@@ -1,0 +1,309 @@
+"""Sharding rules: parameter PartitionSpecs and activation constraints.
+
+Mesh contract (launch/mesh.py): axes ``("pod", "data", "model")`` multi-
+pod or ``("data", "model")`` single-pod. Parallelism mapping:
+
+* **DP**    — batch over ``(pod, data)``; gradients all-reduced
+              hierarchically (in-pod reduce-scatter on ``data``, 1-hop
+              cross-pod all-reduce on ``pod``) by GSPMD.
+* **TP**    — attention heads / FFN hidden over ``model``.
+* **SP**    — sequence over ``model`` between blocks (activations only).
+* **EP**    — MoE experts over ``model`` (see repro.models.moe).
+* **FSDP**  — optionally parameters additionally sharded over ``data``
+              (enabled for the 14B config, where replicated f32 master
+              params + Adam states would not fit HBM).
+
+Rules are *divisibility-safe*: a dim is only sharded if the named axes'
+product divides it — e.g. 2 KV heads never shard over 16-way ``model``
+(they replicate), exactly the fallback a hand-written Megatron layout
+would pick.
+
+``constrain`` is the activation-annotation hook used inside model code:
+a no-op unless a rule set is installed (set_rules / rules_context), so
+models run unmodified on CPU/single-device.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# Activation rules: logical name -> tuple of (axis names or None) per dim,
+# or a LIST of such tuples (candidates tried in order; first one whose every
+# requested axis divides wins — e.g. EP vs expert-TP for MoE tensors).
+DEFAULT_ACT_RULES: dict[str, tuple | list] = {
+    "tokens_bs": (("pod", "data"), None),
+    # Megatron-style TP baseline: the residual stream is replicated over
+    # `model` between blocks (one all-reduce after attention + one after
+    # MLP). Sequence parallelism (seq over `model`, rule below) trades
+    # those all-reduces for all-gather/reduce-scatter pairs + sharded
+    # norms — evaluated as a §Perf iteration, not the baseline.
+    "act_bsd": (("pod", "data"), None, None),
+    "act_bsd_sp": (("pod", "data"), "model", None),  # sequence-parallel
+    "act_bshd": (("pod", "data"), None, "model", None),  # heads TP
+    "logits_bsv": (("pod", "data"), None, "model"),  # vocab TP
+    "decode_bd": (("pod", "data"), None),
+    # unembedding weight AFTER dtype cast: the convert breaks GSPMD's
+    # propagation from the parameter sharding, and an unconstrained
+    # (d, V) operand lets the partitioner pick a d-sharded dot with a
+    # full-vocab f32 all-reduce (40 GiB at qwen vocab; §Perf cell 2).
+    "unembed_dv": (None, "model"),
+    # decode KV cache (b, L, g, dh): head TP, else sequence-sharded
+    "cache_blgd": [
+        (("pod", "data"), None, "model", None),
+        (("pod", "data"), "model", None, None),
+    ],
+    "moe_gecd": [
+        (("pod", "data"), "model", None, None),  # EP: experts sharded
+        (("pod", "data"), None, None, None),
+    ],
+    "moe_gecf": [
+        (("pod", "data"), "model", None, None),  # EP
+        (("pod", "data"), None, None, "model"),  # expert-TP (E < mesh)
+    ],
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axes_size(axes, sizes: Mapping[str, int]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    return int(np.prod([sizes.get(a, 1) for a in axes]))
+
+
+def _filter_axes(axes, sizes):
+    """Drop axes missing from the mesh (e.g. 'pod' on single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in sizes else None
+    kept = tuple(a for a in axes if a in sizes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _spec_dims(shape, wanted, sizes) -> tuple[list, bool]:
+    """Per-dim axes after divisibility filtering + whether every
+    *requested* (mesh-present) axis survived."""
+    dims, complete = [], True
+    for dim, axes in zip(shape, wanted):
+        axes = _filter_axes(axes, sizes)
+        n = _axes_size(axes, sizes)
+        if n > 1 and dim % n == 0:
+            dims.append(axes)
+        else:
+            dims.append(None)
+            if axes is not None:
+                complete = False
+    return dims, complete
+
+
+def safe_spec(
+    shape: tuple[int, ...], wanted: tuple | list, mesh: Mesh
+) -> P:
+    """PartitionSpec from desired per-dim axes, dropping any assignment
+    whose axis product does not divide the dim size. ``wanted`` may be a
+    list of candidates — the first fully-satisfiable one wins."""
+    sizes = _mesh_axis_sizes(mesh)
+    candidates = wanted if isinstance(wanted, list) else [wanted]
+    chosen = None
+    for cand in candidates:
+        dims, complete = _spec_dims(shape, cand, sizes)
+        if chosen is None:
+            chosen = dims
+        if complete:
+            chosen = dims
+            break
+    dims = chosen or []
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
+# --- parameter sharding ------------------------------------------------------
+
+# path regex -> wanted axes per dim (leading layer-stack dim always None).
+# FSDP adds ("data",) to the first matching non-TP dim (see param_spec).
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("model", None)),  # vocab-parallel embedding
+    (r"unembed$", (None, "model")),
+    (r"blocks/(wq|wk|wv)$", (None, None, "model")),
+    (r"blocks/(bq|bk|bv)$", (None, "model")),
+    (r"blocks/wo$", (None, "model", None)),
+    (r"blocks/(w_gate|w_up)$", (None, None, "model")),
+    (r"blocks/w_down$", (None, "model", None)),
+    (r"blocks/moe/router$", (None, None, None)),
+    # experts over model (EP) when E ≥ mesh; else expert-TP on d_ff.
+    (r"blocks/moe/(w_gate|w_up)$", [
+        (None, "model", None, None),
+        (None, None, None, "model"),
+    ]),
+    (r"blocks/moe/w_down$", [
+        (None, "model", None, None),
+        (None, None, "model", None),
+    ]),
+    # recurrentgemma RG-LRU block
+    (r"blocks_rec/(w_x|w_gate_in)$", (None, None, "model")),
+    (r"blocks_rec/w_out$", (None, "model", None)),
+    (r"blocks_rec/(w_a_gate|w_i_gate|a_param|conv_w|conv_b|gate_bias)", (None, "model")),
+    (r"blocks_rec/(w_g|w_u)$", (None, None, "model")),
+    (r"blocks_rec/w_d$", (None, "model", None)),
+    # mamba2
+    (r"blocks/in_proj$", (None, None, "model")),
+    (r"blocks/out_proj$", (None, "model", None)),
+    (r"blocks/(conv_w|conv_b|ssm_norm)$", (None, "model")),
+    (r"blocks/(A_log|D|dt_bias)$", (None, "model")),
+    # whisper encoder/decoder extra mats
+    (r"(enc_blocks|blocks)/(wq_x|wk_x|wv_x)$", (None, None, "model")),
+    (r"(enc_blocks|blocks)/wo_x$", (None, "model", None)),
+    (r"(enc_blocks|blocks)/(w_in)$", (None, None, "model")),
+    (r"(enc_blocks|blocks)/(w_out)$", (None, "model", None)),
+]
+
+_FSDP_ELIGIBLE = re.compile(
+    r"(wq|wk|wv|wo|w_gate|w_up|w_down|in_proj|out_proj|w_in|w_out|embed|unembed)$"
+)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _pick_candidate(shape, wanted, sizes) -> tuple:
+    if isinstance(wanted, list):
+        for cand in wanted:
+            _, complete = _spec_dims(shape, cand, sizes)
+            if complete:
+                return cand
+        return wanted[0]
+    return wanted
+
+
+def param_spec(
+    path: str, shape: tuple[int, ...], mesh: Mesh, *, fsdp: bool = False,
+    profile: str = "tp",
+) -> P:
+    if profile == "dp":
+        if fsdp:  # ZeRO over the whole device set
+            n = int(np.prod(mesh.devices.shape))
+            for i, dim in enumerate(shape):
+                if dim % n == 0 and dim > 1:
+                    wanted = [None] * len(shape)
+                    wanted[i] = ("pod", "data", "model")
+                    return safe_spec(shape, tuple(wanted), mesh)
+        return P()
+    wanted: tuple | list | None = None
+    for pat, rule in PARAM_RULES:
+        if re.search(pat, path):
+            wanted = rule
+            break
+    if wanted is None:
+        wanted = (None,) * len(shape)
+    wanted = _pick_candidate(shape, wanted, _mesh_axis_sizes(mesh))
+    wanted = tuple(wanted[: len(shape)]) + (None,) * (len(shape) - len(wanted))
+    if fsdp and _FSDP_ELIGIBLE.search(path):
+        # Shard the largest still-unsharded dim over data (ZeRO-3 style).
+        sizes = _mesh_axis_sizes(mesh)
+        n = sizes.get("data", 1)
+        best, best_dim = None, 0
+        for i, (dim, axes) in enumerate(zip(shape, wanted)):
+            if axes is None and dim % n == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None:
+            wanted = tuple(
+                "data" if i == best else a for i, a in enumerate(wanted)
+            )
+    return safe_spec(shape, wanted, mesh)
+
+
+def param_shardings(
+    params_shape: Any, mesh: Mesh, *, fsdp: bool = False,
+    profile: str = "tp",
+) -> Any:
+    """Pytree of NamedShardings matching a (possibly abstract) param tree."""
+
+    def one(path, leaf):
+        spec = param_spec(
+            path_str(path), leaf.shape, mesh, fsdp=fsdp, profile=profile
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# --- activation constraints --------------------------------------------------
+
+
+# Pure data-parallel profile: the `model` axis joins the batch axes and
+# parameters replicate. Right for models whose per-chip matmuls are too
+# small to amortize TP collectives (mamba2-780m: d=1536 → Megatron ARs
+# dominate; §Perf cell 3). Gradient sync cost moves to the optimizer
+# all-reduce, which overlaps with backward.
+_DPM = ("pod", "data", "model")
+DP_ACT_RULES: dict[str, tuple | list] = {
+    "tokens_bs": (_DPM, None),
+    "act_bsd": (_DPM, None, None),
+    "act_bshd": (_DPM, None, None, None),
+    "logits_bsv": (_DPM, None, None),
+    "decode_bd": (_DPM, None),
+    "cache_blgd": (_DPM, None, None, None),
+    "unembed_dv": (None, None),
+    "moe_gecd": (_DPM, None, None, None),
+    "moe_gecf": (_DPM, None, None, None),
+}
+
+PROFILES = {"tp": DEFAULT_ACT_RULES, "dp": DP_ACT_RULES}
+
+
+def profile_act_rules(profile: str):
+    return PROFILES[profile]
+
+
+def set_rules(mesh: Mesh | None, rules: Mapping[str, tuple] | None = None):
+    _STATE.mesh = mesh
+    _STATE.rules = dict(rules or DEFAULT_ACT_RULES)
+
+
+@contextlib.contextmanager
+def rules_context(mesh: Mesh, rules: Mapping[str, tuple] | None = None):
+    prev = (getattr(_STATE, "mesh", None), getattr(_STATE, "rules", None))
+    set_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op without
+    an installed rule set)."""
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is None:
+        return x
+    rules = getattr(_STATE, "rules", DEFAULT_ACT_RULES)
+    wanted = rules.get(kind)
+    if wanted is None:
+        return x
+    spec = safe_spec(x.shape, wanted, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,7 @@
+"""Fault-tolerance substrate: supervised training loop with
+checkpoint/restart, failure injection, and straggler monitoring."""
+from repro.ft.supervisor import (  # noqa: F401
+    SimulatedFailure,
+    StragglerMonitor,
+    Supervisor,
+)

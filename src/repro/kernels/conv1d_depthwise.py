@@ -1,0 +1,72 @@
+"""Depthwise causal conv1d Pallas kernel — the paper's stencil-fusion
+technique applied to an assigned architecture (mamba2's conv frontend).
+
+A depthwise causal convolution with k taps is a radius-(k-1) one-sided
+1-D stencil per channel (DESIGN.md §4: the *direct* applicability case).
+The fusion opportunity is the same as the paper's φ(A·B): the conv (linear
+stencil) and the SiLU gate (nonlinear point-wise φ) execute in one kernel
+so the conv output never round-trips HBM.
+
+Layout: (batch·seq, channels) blocks with channels on the 128-lane axis;
+the sequence halo (k-1 steps) is expressed with ``pl.Element`` overlap,
+and batch boundaries are handled by the wrapper's zero padding between
+sequences (per-sequence left padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k, block_s, activation):
+    acc = None
+    for j in range(k):  # static unroll: k is 4 for mamba2
+        term = w_ref[j, :][None, :] * x_ref[pl.ds(j, block_s), :]
+        acc = term if acc is None else acc + term
+    if activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    o_ref[...] = acc
+
+
+def conv1d_depthwise_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    activation: str = "none",
+    block_seq: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused causal depthwise conv (+ optional SiLU).
+
+    ``x``: (batch, seq, channels); ``w``: (k, channels). The wrapper in
+    ``ops.py`` pads ``seq`` to a multiple of ``block_seq``.
+    """
+    b, s, c = x.shape
+    k = w.shape[0]
+    if s % block_seq:
+        raise ValueError(f"seq {s} not divisible by block_seq {block_seq}")
+    # Causal left-pad each sequence independently, then flatten batch.
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))  # (b, s + k - 1, c)
+    kernel = functools.partial(
+        _kernel, k=k, block_s=block_seq, activation=activation
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, s // block_seq),
+        in_specs=[
+            pl.BlockSpec(
+                (None, pl.Element(block_seq + k - 1), c),
+                lambda ib, is_: (ib, is_ * block_seq, 0),
+            ),
+            pl.BlockSpec((k, c), lambda ib, is_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, block_seq, c), lambda ib, is_: (ib, is_, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, c), x.dtype),
+        interpret=interpret,
+    )(xp, w.astype(x.dtype))
+    return out

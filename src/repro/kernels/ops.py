@@ -1,0 +1,135 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These handle shape padding (block divisibility), dtype plumbing, the
+interpret-mode switch for CPU validation, and strategy selection, so
+callers (fusion engine, physics, models) never touch BlockSpecs.
+
+On CPU (this container) ``interpret`` defaults to True; on TPU it
+defaults to False. Override explicitly for tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stencil import OperatorSet
+from repro.kernels import ref as _ref
+from repro.kernels.conv1d_depthwise import conv1d_depthwise_pallas
+from repro.kernels.stencil1d import xcorr1d_pallas
+from repro.kernels.stencil3d import fused_stencil3d_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("strategy", "block_size", "unroll", "interpret"),
+)
+def xcorr1d(
+    f_padded: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    strategy: str = "baseline",
+    block_size: int = 2048,
+    unroll: int = 4,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """1-D cross-correlation over the valid region (paper Eq. 3).
+
+    Accepts any n; pads the tail to a block multiple and slices back.
+    ``strategy='hwc'`` dispatches to the pure-jnp/XLA-managed path.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if strategy == "hwc":
+        return _ref.xcorr1d(f_padded, g)
+    n_taps = g.shape[0]
+    n = f_padded.shape[0] - (n_taps - 1)
+    n_pad = _round_up(n, block_size)
+    if n_pad != n:
+        f_padded = jnp.concatenate(
+            [f_padded, jnp.zeros((n_pad - n,), f_padded.dtype)]
+        )
+    out = xcorr1d_pallas(
+        f_padded, g, strategy=strategy, block_size=block_size,
+        unroll=unroll, interpret=interpret,
+    )
+    return out[:n]
+
+
+def fused_stencil3d(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi: Callable[..., jnp.ndarray],
+    n_out: int,
+    *,
+    aux: jnp.ndarray | None = None,
+    strategy: str = "swc",
+    block: tuple[int, int, int] = (8, 8, 128),
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused φ(A·B) over a padded (n_f, z, y, x) domain (paper Eq. 9).
+
+    ``strategy``: 'hwc' (XLA-managed), 'swc' (Pallas pipelined blocks) or
+    'swc_stream' (Pallas explicit z-streaming, paper Fig. 5b). Interior
+    extents that don't divide the block are handled by shrinking the
+    block to the largest divisor (physics domains are powers of two, so
+    in practice blocks are used as-given).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if strategy == "hwc":
+        return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
+    rads = ops.radius_per_axis()
+    interior = tuple(
+        f_padded.shape[1 + a] - 2 * rads[a] for a in range(3)
+    )
+    block = tuple(
+        _largest_divisor_leq(interior[a], block[a]) for a in range(3)
+    )
+    return fused_stencil3d_pallas(
+        f_padded, ops, phi, n_out, aux=aux, block=block, strategy=strategy,
+        interpret=interpret,
+    )
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_seq", "interpret")
+)
+def conv1d_depthwise(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    activation: str = "none",
+    block_seq: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused depthwise causal conv1d (+ SiLU) — mamba2 frontend stencil."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, c = x.shape
+    block_seq = min(block_seq, _round_up(s, 128))
+    s_pad = _round_up(s, block_seq)
+    if s_pad != s:
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0)))
+    out = conv1d_depthwise_pallas(
+        x, w, activation=activation, block_seq=block_seq,
+        interpret=interpret,
+    )
+    return out[:, :s, :]

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and double as the HWC ("hardware/XLA-managed
+caching") strategy of the fusion engine: plain jnp code whose on-chip
+residency is decided entirely by the compiler — the TPU analogue of the
+paper's L1/L2-managed implementations.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import OperatorSet
+
+
+def xcorr1d(f_padded: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """1-D discrete cross-correlation, paper Eq. 3.
+
+    ``f_padded`` has shape (n + 2r,); ``g`` has shape (2r + 1,).
+    Returns (n,): f'_i = Σ_j g_j · f̂_{i+j}.
+    """
+    n = f_padded.shape[0] - (g.shape[0] - 1)
+    acc = jnp.zeros((n,), dtype=f_padded.dtype)
+    for k in range(g.shape[0]):
+        acc = acc + g[k].astype(f_padded.dtype) * jnp.asarray(f_padded[k : k + n])
+    return acc
+
+
+def apply_operator_set(
+    f_padded: jnp.ndarray, ops: OperatorSet
+) -> dict[str, jnp.ndarray]:
+    """Evaluate every operator of ``ops`` over a padded multi-field array.
+
+    ``f_padded``: (n_f, *spatial_padded) where each spatial axis is padded
+    by the per-axis radius of the set. Returns {op_name: (n_f, *spatial)}.
+    Shifted-slice multiply-accumulate with static offsets — XLA fuses the
+    whole tap set into one loop (this IS the hardware-managed-cache path).
+    """
+    rad = ops.radius_per_axis()
+    spatial = tuple(
+        f_padded.shape[1 + a] - 2 * rad[a] for a in range(ops.ndim)
+    )
+    out: dict[str, jnp.ndarray] = {}
+    for spec in ops.ops:
+        acc = jnp.zeros((f_padded.shape[0],) + spatial, dtype=f_padded.dtype)
+        for off, c in zip(spec.offsets, spec.coeffs):
+            sl = tuple(
+                slice(rad[a] + off[a], rad[a] + off[a] + spatial[a])
+                for a in range(ops.ndim)
+            )
+            acc = acc + jnp.asarray(c, dtype=f_padded.dtype) * f_padded[(slice(None),) + sl]
+        out[spec.name] = acc
+    return out
+
+
+def fused_stencil(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi: Callable[..., jnp.ndarray],
+    aux: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """The paper's fused φ(A·B) evaluation (Eq. 9), reference form.
+
+    Computes all linear operators (Q = A·B at every point) then the
+    nonlinear point-wise map φ. ``phi`` maps {op_name: (n_f, *spatial)} to
+    (n_out, *spatial). ``aux`` (n_aux, *spatial), if given, provides extra
+    point-wise inputs (e.g. the RK3 carry) passed as phi's second arg.
+    """
+    derivs = apply_operator_set(f_padded, ops)
+    if aux is None:
+        return phi(derivs)
+    return phi(derivs, aux)
+
+
+def conv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal 1-D convolution (mamba2 frontend stencil).
+
+    ``x``: (batch, seq, channels); ``w``: (k, channels). Output (b, s, c):
+    y[b, t, c] = Σ_{j<k} w[j, c] · x[b, t - (k-1) + j, c], zero-padded left.
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    seq = x.shape[1]
+    acc = jnp.zeros_like(x)
+    for j in range(k):
+        acc = acc + w[j][None, None, :].astype(x.dtype) * xp[:, j : j + seq, :]
+    return acc
+
+
+def xcorr1d_numpy(f_padded: np.ndarray, g: np.ndarray) -> np.ndarray:
+    """Float64 numpy oracle-of-the-oracle (used by property tests)."""
+    f_padded = np.asarray(f_padded, dtype=np.float64)
+    g = np.asarray(g, dtype=np.float64)
+    n = f_padded.shape[0] - (g.shape[0] - 1)
+    out = np.zeros(n)
+    for k in range(g.shape[0]):
+        out += g[k] * f_padded[k : k + n]
+    return out

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, input specs, jitted step builders,
+multi-pod dry-run, training/serving drivers."""

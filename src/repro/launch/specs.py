@@ -1,0 +1,93 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (assignment
+requirement e.2). Also builds abstract param/optimizer/cache trees via
+``jax.eval_shape`` so the dry-run never materializes a single weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec, get_config, get_model
+from repro.models.config import ModelConfig
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """{tokens, labels, ...} for one global training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        # enc-dec contract: source = encoder frames, target ≤ max_target.
+        return {
+            "tokens": _sds((b, cfg.max_target_len), I32),
+            "labels": _sds((b, cfg.max_target_len), I32),
+            "frames": _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+        }
+    out = {
+        "tokens": _sds((b, s), I32),
+        "labels": _sds((b, s), I32),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+        out["positions"] = _sds((3, b, s), I32)
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        return {"frames": _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, cfg.max_target_len), I32)}
+    out = {"tokens": _sds((b, s), I32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16
+        )
+        out["positions"] = _sds((3, b, s), I32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """One new token against a seq_len-deep cache (serve_step)."""
+    b = shape.global_batch
+    return {"tokens": _sds((b, 1), I32)}
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+
+
+def abstract_opt_state(params_abs: Any) -> Any:
+    from repro.optim import adamw_init
+
+    return jax.eval_shape(lambda: adamw_init(params_abs))
+
+
+def abstract_decode_cache(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_decode_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def input_specs(arch_id: str, shape: ShapeSpec) -> dict[str, Any]:
+    """The assignment's entry point: all model inputs for (arch, shape)."""
+    cfg = get_config(arch_id)
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,146 @@
+"""Training driver: any arch, any mesh, fault-tolerant.
+
+Examples (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 50 --global-batch 8 --seq-len 64
+
+    # fault injection + restart (the ft path exercised end-to-end):
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --reduced --steps 60 --simulate-failure-at 25
+
+On a real cluster the same driver runs under `jax.distributed.initialize`
+with the production mesh (launch/mesh.py) — the only difference is the
+--mesh argument.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import get_config, get_model, reduced_config
+from repro.data import BatchIterator, MarkovLMDataset
+from repro.distrib import sharding as shlib
+from repro.ft import Supervisor
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import jit_train_step
+from repro.optim import AdamWConfig, adamw_init
+
+
+def parse_mesh(s: str):
+    dims = tuple(int(x) for x in s.split("x"))
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return make_mesh(dims, axes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="toy-size config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--simulate-failure-at", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    if cfg.is_encdec:
+        raise SystemExit("use examples/ for enc-dec training demos")
+    mesh = parse_mesh(args.mesh)
+    shlib.set_rules(mesh)
+
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    opt_cfg = AdamWConfig(
+        lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps,
+    )
+
+    dataset = MarkovLMDataset(
+        vocab=cfg.vocab, seq_len=args.seq_len, branching=4
+    )
+    print(f"dataset entropy rate: {dataset.entropy_rate:.3f} nats/token")
+
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct(
+            (args.global_batch, args.seq_len), jax.numpy.int32
+        ),
+        "labels": jax.ShapeDtypeStruct(
+            (args.global_batch, args.seq_len), jax.numpy.int32
+        ),
+    }
+    step_fn, (p_sh, o_sh, b_sh) = jit_train_step(
+        cfg, mesh, batch_abs, opt_cfg=opt_cfg
+    )
+
+    params = api.init_params(cfg, key)
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(adamw_init(params), o_sh)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    sup = Supervisor(ckpt, ckpt_every=args.ckpt_every)
+
+    state = {"params": params, "opt": opt_state}
+    losses: list[float] = []
+
+    def one_step(state, step):
+        it = BatchIterator(
+            dataset, args.global_batch, host_index=0, host_count=1,
+            start_step=step,
+        )
+        batch = {
+            k: jax.device_put(v, b_sh[k]) for k, v in it.next_local().items()
+        }
+        params, opt, metrics = step_fn(state["params"], state["opt"], batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d}  loss {loss:.4f}  "
+                f"lr {float(metrics['lr']):.2e}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}",
+                flush=True,
+            )
+        return {"params": params, "opt": opt}
+
+    def restore(state, step):
+        if step is None:
+            return state, 0
+        tpl = {"params": jax.tree.map(lambda x: x, state["params"]),
+               "opt": state["opt"]}
+        restored, got = ckpt.restore(
+            tpl, step, shardings={"params": p_sh, "opt": o_sh}
+        )
+        return restored, got
+
+    t0 = time.time()
+    with shlib.rules_context(mesh):
+        state, report = sup.run(
+            state, one_step, args.steps,
+            failure_at=args.simulate_failure_at,
+            restore_fn=restore,
+            save_filter=lambda s: s,
+        )
+    dt = time.time() - t0
+    print(
+        f"\ndone: {args.steps} steps in {dt:.1f}s  "
+        f"final loss {losses[-1]:.4f}  (entropy rate "
+        f"{dataset.entropy_rate:.3f})  restarts={report['restarts']} "
+        f"stragglers={report['stragglers']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

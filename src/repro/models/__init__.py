@@ -1,0 +1,2 @@
+"""Assigned-architecture zoo: dense/MoE/VLM/hybrid/audio/SSM LM families,
+all selectable via ``--arch`` (see repro.configs.registry)."""

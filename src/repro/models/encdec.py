@@ -1,0 +1,239 @@
+"""Whisper-style encoder-decoder (whisper-small).
+
+Per the assignment spec the conv/mel frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (b, 1500, d) — the transformer
+backbone (12 bidirectional encoder layers, 12 causal decoder layers with
+cross-attention, learned positional embeddings, pre-LN + GELU MLP) is
+implemented in full. Decode shapes (decode_32k / long_500k) are out of
+this architecture's contract (max target length 448) and are skipped by
+the dry-run matrix; a short-form ``decode_step`` is provided for the
+serving example.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+class EncDecCache(NamedTuple):
+    k: jnp.ndarray  # (L, b, max_target, h, dh) decoder self-attn
+    v: jnp.ndarray
+    xk: jnp.ndarray  # (L, b, enc_seq, h, dh) precomputed cross K/V
+    xv: jnp.ndarray
+    length: jnp.ndarray
+
+
+def _attn_params(key, n, d, h, hd):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], (n, d, h * hd)),
+        "wk": L.dense_init(ks[1], (n, d, h * hd)),
+        "wv": L.dense_init(ks[2], (n, d, h * hd)),
+        "wo": L.dense_init(ks[3], (n, h * hd, d)),
+        "bq": jnp.zeros((n, h * hd)),
+        "bv": jnp.zeros((n, h * hd)),
+        "bo": jnp.zeros((n, d)),
+    }
+
+
+def _block_params(key, n, d, h, hd, ff, cross: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1_w": jnp.ones((n, d)), "ln1_b": jnp.zeros((n, d)),
+        "attn": _attn_params(ks[0], n, d, h, hd),
+        "ln2_w": jnp.ones((n, d)), "ln2_b": jnp.zeros((n, d)),
+        "w_in": L.dense_init(ks[1], (n, d, ff)),
+        "b_in": jnp.zeros((n, ff)),
+        "w_out": L.dense_init(ks[2], (n, ff, d)),
+        "b_out": jnp.zeros((n, d)),
+    }
+    if cross:
+        p["lnx_w"] = jnp.ones((n, d))
+        p["lnx_b"] = jnp.zeros((n, d))
+        p["xattn"] = _attn_params(ks[3], n, d, h, hd)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    d, h, hd, ff = cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    return {
+        "enc_pos": L.dense_init(ks[0], (cfg.encoder_seq, d), scale=0.02),
+        "enc_blocks": _block_params(ks[1], cfg.n_encoder_layers, d, h, hd, ff, False),
+        "enc_ln_w": jnp.ones((d,)), "enc_ln_b": jnp.zeros((d,)),
+        "embed": L.dense_init(ks[2], (cfg.vocab, d), scale=0.02),
+        "dec_pos": L.dense_init(ks[3], (cfg.max_target_len, d), scale=0.02),
+        "blocks": _block_params(ks[4], cfg.n_layers, d, h, hd, ff, True),
+        "dec_ln_w": jnp.ones((d,)), "dec_ln_b": jnp.zeros((d,)),
+    }
+
+
+def _mha(x, p, cfg, *, kv: jnp.ndarray | None = None, causal: bool):
+    """Whisper MHA (no k bias, per the original)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    src = x if kv is None else kv
+    q = (x @ p["wq"] + p["bq"]).reshape(b, s, h, hd)
+    k = (src @ p["wk"]).reshape(b, src.shape[1], h, hd)
+    v = (src @ p["wv"] + p["bv"]).reshape(b, src.shape[1], h, hd)
+    if s > 2048:
+        out = L.chunked_attention(q, k, v, causal=causal)
+    else:
+        out = L.attention(q, k, v, causal=causal)
+    return out.reshape(b, s, h * hd) @ p["wo"] + p["bo"]
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray):
+    """frames (b, enc_seq, d) — stubbed conv-frontend output."""
+    from repro.models.transformer import cast_params
+
+    x = frames.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)
+    x = constrain(x, "act_bsd")
+
+    def body(carry, blk):
+        blk = cast_params(blk, cfg.dtype)
+        h = carry + _mha(
+            L.layer_norm(carry, blk["ln1_w"], blk["ln1_b"]),
+            blk["attn"], cfg, causal=False,
+        )
+        ff = L.gelu_mlp(
+            L.layer_norm(h, blk["ln2_w"], blk["ln2_b"]),
+            blk["w_in"], blk["b_in"], blk["w_out"], blk["b_out"],
+        )
+        return constrain(h + ff, "act_bsd"), 0.0
+
+    from repro.models.transformer import scan_layers
+
+    x, _ = scan_layers(body, x, params["enc_blocks"], cfg.analysis_unroll)
+    return L.layer_norm(x, params["enc_ln_w"], params["enc_ln_b"])
+
+
+def decode_train(params: Params, cfg: ModelConfig, tokens, enc_out):
+    from repro.models.transformer import cast_params
+
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x + params["dec_pos"][:s].astype(cfg.dtype)
+
+    def body(carry, blk):
+        blk = cast_params(blk, cfg.dtype)
+        h = carry + _mha(
+            L.layer_norm(carry, blk["ln1_w"], blk["ln1_b"]),
+            blk["attn"], cfg, causal=True,
+        )
+        h = h + _mha(
+            L.layer_norm(h, blk["lnx_w"], blk["lnx_b"]),
+            blk["xattn"], cfg, kv=enc_out, causal=False,
+        )
+        ff = L.gelu_mlp(
+            L.layer_norm(h, blk["ln2_w"], blk["ln2_b"]),
+            blk["w_in"], blk["b_in"], blk["w_out"], blk["b_out"],
+        )
+        return constrain(h + ff, "act_bsd"), 0.0
+
+    from repro.models.transformer import scan_layers
+
+    x, _ = scan_layers(body, x, params["blocks"], cfg.analysis_unroll)
+    x = L.layer_norm(x, params["dec_ln_w"], params["dec_ln_b"])
+    # Whisper ties output projection to the token embedding.
+    return x @ params["embed"].T.astype(cfg.dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frames=None, **_):
+    enc = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, enc), jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    logits, _ = forward(
+        params, cfg, batch["tokens"], frames=batch["frames"]
+    )
+    loss = L.token_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+# --- decode (short-form serving) --------------------------------------------
+
+
+def init_decode_cache(
+    params: Params, cfg: ModelConfig, enc_out: jnp.ndarray
+) -> EncDecCache:
+    b = enc_out.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    Lc = cfg.n_layers
+
+    def cross_kv(blk, enc):
+        k = (enc @ blk["xattn"]["wk"]).reshape(b, -1, h, hd)
+        v = (enc @ blk["xattn"]["wv"] + blk["xattn"]["bv"]).reshape(b, -1, h, hd)
+        return k, v
+
+    ks, vs = jax.vmap(
+        lambda blk: cross_kv(blk, enc_out.astype(cfg.dtype))
+    )(jax.tree.map(lambda p: p.astype(cfg.dtype), params["blocks"]))
+    t = cfg.max_target_len
+    return EncDecCache(
+        k=jnp.zeros((Lc, b, t, h, hd), cfg.dtype),
+        v=jnp.zeros((Lc, b, t, h, hd), cfg.dtype),
+        xk=ks, xv=vs,
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: EncDecCache):
+    from repro.models.transformer import cast_params
+
+    b = tokens.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], cache.length, 1
+    ).astype(cfg.dtype)
+
+    def body(carry, scanned):
+        (xc,) = carry
+        blk, kc, vc, xk, xv = scanned
+        blk = cast_params(blk, cfg.dtype)
+        xin = L.layer_norm(xc, blk["ln1_w"], blk["ln1_b"])
+        ap = blk["attn"]
+        q = (xin @ ap["wq"] + ap["bq"]).reshape(b, 1, h, hd)
+        k = (xin @ ap["wk"]).reshape(b, 1, h, hd)
+        v = (xin @ ap["wv"] + ap["bv"]).reshape(b, 1, h, hd)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k.astype(kc.dtype), cache.length, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v.astype(vc.dtype), cache.length, axis=1
+        )
+        out = L.decode_attention(q, kc, vc, cache.length + 1)
+        hh = xc + out.reshape(b, 1, h * hd) @ ap["wo"] + ap["bo"]
+        # cross attention over the full (static) encoder output
+        xp = blk["xattn"]
+        xin2 = L.layer_norm(hh, blk["lnx_w"], blk["lnx_b"])
+        q2 = (xin2 @ xp["wq"] + xp["bq"]).reshape(b, 1, h, hd)
+        out2 = L.decode_attention(q2, xk, xv, jnp.asarray(xk.shape[1]))
+        hh = hh + out2.reshape(b, 1, h * hd) @ xp["wo"] + xp["bo"]
+        ff = L.gelu_mlp(
+            L.layer_norm(hh, blk["ln2_w"], blk["ln2_b"]),
+            blk["w_in"], blk["b_in"], blk["w_out"], blk["b_out"],
+        )
+        return (hh + ff,), (kc, vc)
+
+    from repro.models.transformer import scan_layers
+
+    (x,), (k_new, v_new) = scan_layers(
+        body, (x,), (params["blocks"], cache.k, cache.v, cache.xk, cache.xv),
+        cfg.analysis_unroll,
+    )
+    x = L.layer_norm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = x @ params["embed"].T.astype(cfg.dtype)
+    return logits[:, 0], EncDecCache(
+        k=k_new, v=v_new, xk=cache.xk, xv=cache.xv, length=cache.length + 1
+    )

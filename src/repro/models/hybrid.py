@@ -1,0 +1,324 @@
+"""RecurrentGemma / Griffin hybrid family (recurrentgemma-9b).
+
+Layer pattern 1:2 — every third block is local (sliding-window, MQA)
+attention, the rest are recurrent blocks: temporal conv (k=4, a causal
+1-D stencil — paper-technique applicability, DESIGN.md §4) followed by
+the RG-LRU gated linear recurrence (arXiv:2402.19427):
+
+    r_t = σ(W_a x_t + b_a)                        (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                        (input gate)
+    log a_t = −c · softplus(Λ) · r_t              (c = 8)
+    h_t = a_t · h_{t−1} + √(1 − a_t²) · (i_t ⊙ x_t)
+
+Training evaluates the recurrence with an associative scan (log-depth on
+TPU); decode carries (h, conv window) as O(1) state — with the bounded
+local-attention KV window this is why ``long_500k`` runs for this arch.
+
+Layers are stacked as super-blocks of (rec, rec, attn) scanned with
+lax.scan, plus an unstacked tail for n_layers % 3.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+LRU_C = 8.0
+
+
+class HybridCache(NamedTuple):
+    # recurrent blocks
+    lru_h: jnp.ndarray  # (n_rec, b, w)
+    conv: jnp.ndarray  # (n_rec, b, k-1, w)
+    # attention blocks: bounded window of KV
+    k: jnp.ndarray  # (n_att, b, window, g, dh)
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def split_layers(n_layers: int, pattern: int) -> tuple[int, int, int]:
+    """(n_super, n_tail_rec, n_att). Pattern 3 → (rec, rec, att) blocks."""
+    n_super = n_layers // pattern
+    return n_super, n_layers - n_super * pattern, n_super
+
+
+def init_rec_params(cfg: ModelConfig, key, n: int) -> Params:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((n, d)),
+        "w_x": L.dense_init(ks[0], (n, d, w)),
+        "w_gate_in": L.dense_init(ks[1], (n, d, w)),
+        "conv_w": L.dense_init(ks[2], (n, cfg.ssm_conv_kernel, w)),
+        "conv_b": jnp.zeros((n, w)),
+        "w_a_gate": L.dense_init(ks[3], (n, w)),  # diagonal-ish gates
+        "b_a_gate": jnp.zeros((n, w)),
+        "w_i_gate": L.dense_init(ks[4], (n, w)),
+        "b_i_gate": jnp.zeros((n, w)),
+        "a_param": jnp.full((n, w), 2.0),  # Λ: softplus(2) ≈ 2.13
+        "w_out": L.dense_init(ks[5], (n, w, d)),
+        "ln_mlp": jnp.zeros((n, d)),
+        "w_g": L.dense_init(ks[6], (n, d, cfg.d_ff)),
+        "w_u": L.dense_init(ks[7], (n, d, cfg.d_ff)),
+        "w_d": L.dense_init(ks[0], (n, cfg.d_ff, d)),
+    }
+
+
+def init_att_params(cfg: ModelConfig, key, n: int) -> Params:
+    from repro.models.transformer import init_block_params
+
+    return init_block_params(cfg, key, n)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    n_super, n_tail, n_att = split_layers(cfg.n_layers, cfg.hybrid_pattern)
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=cfg.d_model**-0.5),
+        "super": {
+            "rec1": init_rec_params(cfg, ks[1], n_super),
+            "rec2": init_rec_params(cfg, ks[2], n_super),
+            "att": init_att_params(cfg, ks[3], n_super),
+        },
+        "tail_rec": init_rec_params(cfg, ks[4], n_tail),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "unembed": L.dense_init(ks[5], (cfg.d_model, cfg.vocab)),
+    }
+
+
+# --- RG-LRU ------------------------------------------------------------------
+
+
+def rg_lru_scan(x: jnp.ndarray, r: jnp.ndarray, i: jnp.ndarray,
+                lam: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """Associative-scan RG-LRU over (b, l, w) → (y, h_last)."""
+    log_a = -LRU_C * jax.nn.softplus(lam)[None, None, :] * r  # (b, l, w)
+    a = jnp.exp(log_a)
+    # √(1−a²) via expm1: 1−a² cancels catastrophically as a→1 (r→0).
+    # The max-clamp keeps ∂√ finite when r underflows to exactly 0.
+    gated = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * (i * x)
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None], gated], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rec_block(x, blk: Params, cfg: ModelConfig):
+    """Recurrent mixer: conv1d stencil → RG-LRU, gated by GeLU branch."""
+    xin = L.rms_norm(x, blk["ln"], cfg.norm_eps)
+    u = xin @ blk["w_x"]  # (b, l, w)
+    gate = jax.nn.gelu(
+        (xin @ blk["w_gate_in"]).astype(jnp.float32), approximate=True
+    )
+    from repro.kernels import ref as kref
+
+    u = kref.conv1d_depthwise_causal(u, blk["conv_w"].astype(u.dtype))
+    u = u + blk["conv_b"].astype(u.dtype)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * blk["w_a_gate"].astype(jnp.float32)
+                       + blk["b_a_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * blk["w_i_gate"].astype(jnp.float32)
+                       + blk["b_i_gate"].astype(jnp.float32))
+    y, _ = rg_lru_scan(uf, r, i, blk["a_param"].astype(jnp.float32))
+    y = (y * gate).astype(x.dtype)
+    h = x + y @ blk["w_out"]
+    ff = L.gated_mlp(
+        L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps),
+        blk["w_g"], blk["w_u"], blk["w_d"], cfg.mlp,
+    )
+    return h + ff
+
+
+def att_block(x, blk: Params, cfg: ModelConfig, cos, sin):
+    from repro.models.transformer import decoder_block
+    import dataclasses
+
+    cfg_local = dataclasses.replace(cfg, sliding_window=cfg.local_window)
+    out, _ = decoder_block(x, blk, cfg_local, cos, sin)
+    return out
+
+
+# --- forward -----------------------------------------------------------------
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, **_):
+    from repro.models.transformer import cast_params
+
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)  # gemma-style scale
+    x = constrain(x, "act_bsd")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+    def super_block(xc, sup):
+        h = rec_block(xc, sup["rec1"], cfg)
+        h = rec_block(h, sup["rec2"], cfg)
+        h = att_block(h, sup["att"], cfg, cos, sin)
+        return constrain(h, "act_bsd")
+
+    if cfg.remat != "none":
+        super_block = jax.checkpoint(
+            super_block,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+
+    def scan_body(carry, sup):
+        return super_block(carry, cast_params(sup, cfg.dtype)), 0.0
+
+    from repro.models.transformer import scan_layers
+
+    x, _ = scan_layers(scan_body, x, params["super"], cfg.analysis_unroll)
+    n_tail = params["tail_rec"]["ln"].shape[0]
+    for t in range(n_tail):
+        blk = jax.tree.map(lambda p: p[t], params["tail_rec"])
+        x = rec_block(x, cast_params(blk, cfg.dtype), cfg)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ constrain(params["unembed"].astype(cfg.dtype), "unembed_dv")
+    return constrain(logits, "logits_bsv"), jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    loss = L.token_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    n_super, n_tail, n_att = split_layers(cfg.n_layers, cfg.hybrid_pattern)
+    n_rec = 2 * n_super + n_tail
+    w = cfg.lru_width or cfg.d_model
+    window = min(cfg.local_window, max_len)
+    kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else cfg.dtype
+    return HybridCache(
+        lru_h=jnp.zeros((n_rec, batch, w), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, cfg.ssm_conv_kernel - 1, w), jnp.float32),
+        k=jnp.zeros((n_att, batch, window, cfg.n_kv_heads, cfg.hd), kv_dtype),
+        v=jnp.zeros((n_att, batch, window, cfg.n_kv_heads, cfg.hd), kv_dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _rec_step(xc, blk, cfg, lru_h, conv_st):
+    """Single-token recurrent block step (O(1) state)."""
+    b = xc.shape[0]
+    xin = L.rms_norm(xc, blk["ln"], cfg.norm_eps)
+    u = xin @ blk["w_x"]  # (b, 1, w)
+    gate = jax.nn.gelu(
+        (xin @ blk["w_gate_in"]).astype(jnp.float32), approximate=True
+    )
+    window = jnp.concatenate([conv_st.astype(xc.dtype), u], axis=1)
+    u1 = jnp.einsum("bkc,kc->bc", window, blk["conv_w"]) + blk["conv_b"]
+    new_conv = window[:, 1:].astype(jnp.float32)
+    uf = u1.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * blk["w_a_gate"].astype(jnp.float32)
+                       + blk["b_a_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * blk["w_i_gate"].astype(jnp.float32)
+                       + blk["b_i_gate"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(blk["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * lru_h + jnp.sqrt(
+        jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)
+    ) * (i * uf)
+    y = (h_new[:, None] * gate).astype(xc.dtype)
+    h = xc + y @ blk["w_out"]
+    ff = L.gated_mlp(
+        L.rms_norm(h, blk["ln_mlp"], cfg.norm_eps),
+        blk["w_g"], blk["w_u"], blk["w_d"], cfg.mlp,
+    )
+    return h + ff, h_new, new_conv
+
+
+def _att_step(xc, blk, cfg, k_cache, v_cache, length, cos, sin):
+    """Single-token local attention step against a ring-buffer window."""
+    import dataclasses
+
+    from repro.models.transformer import _qkv, ffn_block
+
+    b = xc.shape[0]
+    cfg_l = dataclasses.replace(cfg, sliding_window=cfg.local_window)
+    xin = L.rms_norm(xc, blk["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(xin, blk, cfg_l)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    window = k_cache.shape[1]
+    slot = jnp.mod(length, window)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1
+    )
+    # Ring buffer: all entries < min(length+1, window) are valid; RoPE is
+    # absolute so attention scores are position-correct regardless of slot
+    # order.
+    valid = jnp.minimum(length + 1, window)
+    out = L.decode_attention(q, k_cache, v_cache, valid)
+    h = xc + out.reshape(b, 1, cfg.n_heads * cfg.hd) @ blk["wo"]
+    ff, _ = ffn_block(L.rms_norm(h, blk["ln2"], cfg.norm_eps), blk, cfg_l)
+    return h + ff, k_cache, v_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, cache: HybridCache):
+    from repro.models.transformer import cast_params
+
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    pos = jnp.broadcast_to(cache.length[None, None], (b, 1))
+    cos, sin = L.rope_cos_sin(pos, cfg.hd, cfg.rope_theta)
+
+    n_super, n_tail, _ = split_layers(cfg.n_layers, cfg.hybrid_pattern)
+    lru_h, conv, ks, vs = cache.lru_h, cache.conv, cache.k, cache.v
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    ri, ai = 0, 0
+    for si in range(n_super):
+        sup = jax.tree.map(lambda p, si=si: p[si], params["super"])
+        sup = cast_params(sup, cfg.dtype)
+        for rec_name in ("rec1", "rec2"):
+            x, h1, c1 = _rec_step(x, sup[rec_name], cfg, lru_h[ri], conv[ri])
+            new_h.append(h1)
+            new_conv.append(c1)
+            ri += 1
+        x, k1, v1 = _att_step(
+            x, sup["att"], cfg, ks[ai], vs[ai], cache.length, cos, sin
+        )
+        new_k.append(k1)
+        new_v.append(v1)
+        ai += 1
+    for t in range(n_tail):
+        blk = cast_params(
+            jax.tree.map(lambda p, t=t: p[t], params["tail_rec"]), cfg.dtype
+        )
+        x, h1, c1 = _rec_step(x, blk, cfg, lru_h[ri], conv[ri])
+        new_h.append(h1)
+        new_conv.append(c1)
+        ri += 1
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ constrain(params["unembed"].astype(cfg.dtype), "unembed_dv")
+    return logits[:, 0], HybridCache(
+        lru_h=jnp.stack(new_h),
+        conv=jnp.stack(new_conv),
+        k=jnp.stack(new_k),
+        v=jnp.stack(new_v),
+        length=cache.length + 1,
+    )

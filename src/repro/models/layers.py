@@ -1,0 +1,359 @@
+"""Shared model building blocks: norms, RoPE (incl. M-RoPE), GQA
+attention (full / sliding-window / chunked-flash / KV-cache decode), and
+gated MLPs. Pure functions over explicit parameter pytrees — no module
+framework, so every layer composes with pjit/shard_map and scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- norms -------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+# --- rotary embeddings -------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2) / head_dim)
+
+
+def rope_cos_sin(
+    positions: jnp.ndarray, head_dim: int, theta: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., s) int → cos/sin (..., s, head_dim/2) f32."""
+    inv = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(
+    positions: jnp.ndarray,
+    head_dim: int,
+    theta: float,
+    sections: tuple[int, int, int],
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL multimodal RoPE: ``positions`` (3, b, s) carries the
+    temporal/height/width position streams; the rotary frequency bands
+    are split between them per ``sections`` (in dh/2 units)."""
+    if sum(sections) != head_dim // 2:
+        raise ValueError("mrope sections must sum to head_dim // 2")
+    inv = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (3, b, s, dh/2)
+    parts = []
+    start = 0
+    for axis, width in enumerate(sections):
+        parts.append(ang[axis, ..., start : start + width])
+        start += width
+    ang = jnp.concatenate(parts, axis=-1)  # (b, s, dh/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (b, s, h, dh); cos/sin (b, s, dh/2) — rotate-half convention."""
+    dh = x.shape[-1]
+    x1 = x[..., : dh // 2].astype(jnp.float32)
+    x2 = x[..., dh // 2 :].astype(jnp.float32)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- attention ---------------------------------------------------------------
+
+
+def expand_kv(
+    kv: jnp.ndarray, n_heads: int, rule: str = "act_bshd"
+) -> jnp.ndarray:
+    """GQA: (b, t, g, dh) → (b, t, h, dh) by repeating groups.
+
+    Head-dim einsums with FULL heads keep every attention op local under
+    head-sharded TP (grouped 5-D einsums confuse the SPMD partitioner
+    into per-chunk regathers — measured in EXPERIMENTS.md §Dry-run). The
+    expansion is free per-device when heads are sharded: each chip
+    materializes only its own heads' copies. ``rule`` picks the
+    annotation — decode uses the cache rule (falls back to
+    sequence-sharding when heads don't divide the model axis).
+    """
+    g = kv.shape[2]
+    if g == n_heads:
+        return kv
+    kv = jnp.repeat(kv, n_heads // g, axis=2)
+    from repro.distrib.sharding import constrain
+
+    return constrain(kv, rule)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """Materialized GQA attention (short sequences / smoke tests).
+
+    q (b, s, h, dh); k, v (b, t, g, dh) with g | h.
+    """
+    b, s, h, dh = q.shape
+    scale = softmax_scale or dh**-0.5
+    kf = expand_kv(k, h)
+    vf = expand_kv(v, h)
+    logits = jnp.einsum(
+        "bshd,bthd->bhst",
+        (q * scale).astype(jnp.float32),
+        kf.astype(jnp.float32),
+    )
+    t = k.shape[1]
+    qpos = jnp.arange(s)[:, None] + (t - s)  # right-aligned queries
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p.astype(vf.dtype), vf)
+    return out
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    softmax_scale: float | None = None,
+    unroll: bool = False,
+    skip_masked_blocks: bool = False,
+) -> jnp.ndarray:
+    """Flash-style streaming-softmax attention in pure JAX: O(s·c) live
+    memory, lax.scan over KV chunks with running (max, denom, acc).
+
+    For ``window`` (sliding-window/local attention) the KV stream is
+    restricted statically to the two chunks covering the window when
+    ``kv_chunk == window`` — mixtral/recurrentgemma's banded pattern costs
+    O(s·w), not O(s²).
+    """
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    scale = softmax_scale or dh**-0.5
+    if s % q_chunk or t % kv_chunk:
+        raise ValueError(f"chunk sizes must divide seq: {s}/{q_chunk}, {t}/{kv_chunk}")
+    nq, nk = s // q_chunk, t // kv_chunk
+    qg = (q * scale).reshape(b, nq, q_chunk, h, dh)
+    kc = expand_kv(k, h).reshape(b, nk, kv_chunk, h, dh)
+    vc = expand_kv(v, h).reshape(b, nk, kv_chunk, h, dh)
+
+    banded = window is not None and window == kv_chunk and causal
+    if banded and (kv_chunk % q_chunk != 0):
+        raise ValueError("banded attention needs q_chunk | kv_chunk")
+
+    def process_q_chunk(iq, q_blk):
+        # q_blk (b, c, h, dh)
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kc, jk, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, jk, 1, keepdims=False)
+            logits = jnp.einsum(
+                "bshd,bthd->bhst",
+                q_blk.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+            )
+            qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = jk * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            logits = jnp.where(mask[None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p, v_blk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        if unroll:
+            # Static python loop: every block appears in the HLO, so the
+            # dry-run's cost_analysis counts the true FLOPs (a lax.scan
+            # body is only counted once). With ``skip_masked_blocks`` the
+            # fully-above-diagonal blocks are dropped entirely — the
+            # flash-style triangular saving the masked scan path cannot
+            # express (≈2× attention FLOPs; see EXPERIMENTS.md §Perf).
+            iq_c = int(iq)
+            if banded:
+                hi = ((iq_c + 1) * q_chunk - 1) // kv_chunk
+                ids = sorted({max(hi - 1, 0), hi})
+            elif causal and skip_masked_blocks:
+                hi = ((iq_c + 1) * q_chunk - 1) // kv_chunk
+                ids = list(range(hi + 1))
+            else:
+                ids = list(range(nk))
+            carry = (m0, l0, a0)
+            for jk in ids:
+                carry, _ = kv_step(carry, jnp.asarray(jk))
+            m, l, acc = carry
+        else:
+            if banded:
+                # A clipped duplicate (hi == 0) is processed twice; the
+                # streaming-softmax merge makes that a no-op on output.
+                hi = ((iq + 1) * q_chunk - 1) // kv_chunk
+                kv_ids = jnp.stack([jnp.maximum(hi - 1, 0), hi])
+            else:
+                kv_ids = jnp.arange(nk)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kv_ids)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (b, h, c, dh)
+
+    if unroll:
+        outs = jnp.stack([
+            process_q_chunk(iq, qg[:, iq]) for iq in range(nq)
+        ])
+    else:
+        outs = jax.lax.map(
+            lambda iq: process_q_chunk(iq, jax.lax.dynamic_index_in_dim(qg, iq, 1, keepdims=False)),
+            jnp.arange(nq),
+        )  # (nq, b, h, c, dh)
+    out = jnp.moveaxis(outs, 0, 2)  # (b, h, nq, c, dh)
+    out = out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    *,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-token decode against a KV cache.
+
+    q (b, 1, h, dh); caches (b, L, g, dh); ``cache_len`` (scalar/int) =
+    number of valid cache entries INCLUDING the current token.
+    """
+    b, _, h, dh = q.shape
+    scale = softmax_scale or dh**-0.5
+    kf = expand_kv(k_cache, h, rule="cache_blgd")
+    vf = expand_kv(v_cache, h, rule="cache_blgd")
+    logits = jnp.einsum(
+        "bshd,bthd->bhst",
+        (q * scale).astype(jnp.float32),
+        kf.astype(jnp.float32),
+    )
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos < cache_len
+    if window is not None:
+        mask &= kpos > cache_len - 1 - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p.astype(vf.dtype), vf)
+    return out
+
+
+# --- MLPs --------------------------------------------------------------------
+
+
+def gated_mlp(x, w_gate, w_up, w_down, kind: str = "swiglu"):
+    gate = x @ w_gate
+    up = x @ w_up
+    if kind == "swiglu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    elif kind == "geglu":
+        act = jax.nn.gelu(
+            gate.astype(jnp.float32), approximate=True
+        ).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    return (act * up) @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu((x @ w_in + b_in).astype(jnp.float32), approximate=True)
+    return h.astype(x.dtype) @ w_out + b_out
+
+
+# --- init helpers ------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Normal init scaled by fan_in^-1/2. For stacked layer params
+    (L, d_in, d_out) the fan-in is the SECOND-TO-LAST dim, not the layer
+    axis."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else max(fan_in, 1) ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked decode cache."""
+
+    k: jnp.ndarray  # (L, b, max_len, g, dh)
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32: valid entries
+
+
+def token_xent(
+    logits: jnp.ndarray,
+    labels: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy, sharding-friendly.
+
+    The gold logit is extracted with an iota-compare + masked sum over
+    the vocab axis rather than ``take_along_axis``: under vocab-parallel
+    logits the gather would force GSPMD to all-gather the whole logits
+    tensor (tokens × vocab bytes on the wire), while the masked sum
+    reduces to a per-token psum.
+
+    The f32 cast is re-constrained: sharding constraints bind the
+    COTANGENT too, keeping the (tokens × vocab) f32 loss gradient
+    vocab-sharded through the backward dot (without this, GSPMD
+    all-gathers the full-vocab f32 cotangent — tens of GiB; measured in
+    EXPERIMENTS.md §Perf).
+    """
+    from repro.distrib.sharding import constrain
+
+    lf = constrain(logits.astype(jnp.float32), "logits_bsv")
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(iota == labels[..., None], lf, 0.0), axis=-1
+    )
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN (mixtral-8x7b, qwen3-moe-30b-a3b).
+
+Baseline dispatch is the GShard/Switch grouped-einsum formulation — the
+GSPMD-proven layout: tokens are split into groups (sharded over the DP
+axes), a capacity-bounded one-hot dispatch tensor routes each group's
+tokens to experts, and expert FFNs run as batched einsums with the expert
+dim sharded over ``model`` (EP) when E ≥ mesh-model, or the expert hidden
+dim sharded (expert-TP) when E < mesh-model (mixtral: 8 experts on a
+16-way model axis).
+
+The dispatch einsum burns ~5-10% extra MXU FLOPs vs an all-to-all
+permutation — that trade is measured and attacked in EXPERIMENTS.md §Perf
+(the a2a shard_map variant lives in repro.distrib.moe_a2a).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def init_moe_params(cfg: ModelConfig, key, n_layers: int):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (n_layers, d, E)),
+        "w_gate": L.dense_init(ks[1], (n_layers, E, d, f)),
+        "w_up": L.dense_init(ks[2], (n_layers, E, d, f)),
+        "w_down": L.dense_init(ks[3], (n_layers, E, f, d)),
+    }
+
+
+def _group(x: jnp.ndarray, group_size: int = 1024):
+    """(b, s, d) → (G, Tg, d) with Tg | b·s."""
+    b, s, d = x.shape
+    t = b * s
+    tg = min(group_size, t)
+    while t % tg:
+        tg -= 1
+    return x.reshape(t // tg, tg, d), tg
+
+
+def router_topk(
+    logits: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Softmax router with renormalized top-k gates.
+
+    logits (G, T, E) → (gates (G, T, k), idx (G, T, k), probs (G, T, E)).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_ffn(
+    x: jnp.ndarray,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    group_size: int = 1024,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped capacity-based MoE FFN → (out (b, s, d), aux loss scalar)."""
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xg, tg = _group(x, group_size)
+    G = xg.shape[0]
+    cap = max(int(tg * K / E * cfg.capacity_factor), 1)
+
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, idx, probs = router_topk(logits, K)  # (G,Tg,K) ×2, (G,Tg,E)
+
+    # Expert selection mask summed over the K choices: (G, Tg, E).
+    sel_k = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,Tg,K,E)
+    # Priority: k-th choices compete in (k, token) order — flatten K into
+    # the position axis ahead of tokens so 1st choices never get dropped
+    # in favour of 2nd choices (GShard's priority rule).
+    sel_kt = jnp.swapaxes(sel_k, 1, 2).reshape(G, K * tg, E)
+    pos_kt = jnp.cumsum(sel_kt, axis=1) - 1.0  # position within expert
+    pos = jnp.swapaxes(pos_kt.reshape(G, K, tg, E), 1, 2)  # (G,Tg,K,E)
+    keep = (pos < cap) & (sel_k > 0)
+
+    # dispatch (G,Tg,E,C): one-hot over capacity slots.
+    pos_id = jnp.where(keep, pos, 0).astype(jnp.int32)
+    slot = jax.nn.one_hot(pos_id, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot.sum(axis=2)  # sum over K → (G,Tg,E,C)
+    combine = (slot * gates[..., None, None]).sum(axis=2)
+
+    dtype = x.dtype
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dtype), xg)
+    xe = constrain(xe, "moe_gecd")
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dtype))
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(dtype) * h_up
+    h = constrain(h, "moe_gecf")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dtype), ye)
+
+    # Switch load-balance auxiliary: E · Σ_e f̄_e · P̄_e.
+    f_e = jnp.mean(sel_k.sum(2), axis=1)  # (G, E) fraction routed
+    p_e = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(f_e * p_e, axis=-1)) / K
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

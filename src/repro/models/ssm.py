@@ -1,0 +1,336 @@
+"""Mamba-2 (SSD — state-space duality) family (mamba2-780m).
+
+The block follows arXiv:2405.21060: in_proj → depthwise causal conv (the
+paper-technique stencil: see kernels/conv1d_depthwise.py) → SSD sequence
+mixing in the chunked dual form (intra-chunk quadratic attention-like
+matmuls on the MXU + inter-chunk linear recurrence) → gated RMSNorm →
+out_proj.
+
+Both the chunked-parallel form (training) and the O(1)-state recurrent
+form (decode — the ``long_500k`` cell runs THIS, which is why the arch
+supports 524k contexts) are implemented; tests assert they match.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray  # (n_layers, b, k-1, conv_ch)
+    state: jnp.ndarray  # (n_layers, b, h, n, p)
+    length: jnp.ndarray
+
+
+def _dims(cfg: ModelConfig):
+    dv = cfg.d_inner
+    h = cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+    g = cfg.ssm_n_groups
+    n = cfg.ssm_state
+    conv_ch = dv + 2 * g * n
+    return dv, h, p, g, n, conv_ch
+
+
+def init_block_params(cfg: ModelConfig, key, n_layers: int) -> Params:
+    d = cfg.d_model
+    dv, h, p, g, n, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * dv + 2 * g * n + h  # z, xBC, dt
+    return {
+        "ln1": jnp.zeros((n_layers, d)),
+        "in_proj": L.dense_init(ks[0], (n_layers, d, in_dim)),
+        "conv_w": L.dense_init(ks[1], (n_layers, cfg.ssm_conv_kernel, conv_ch)),
+        "conv_b": jnp.zeros((n_layers, conv_ch)),
+        "A_log": jnp.zeros((n_layers, h)),  # A = -exp(A_log) = -1
+        "D": jnp.ones((n_layers, h)),
+        "dt_bias": jnp.zeros((n_layers, h)),
+        "ssm_norm": jnp.zeros((n_layers, dv)),
+        "out_proj": L.dense_init(ks[2], (n_layers, dv, d)),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": L.dense_init(k1, (cfg.vocab, cfg.d_model), scale=cfg.d_model**-0.5),
+        "blocks": init_block_params(cfg, k2, cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "unembed": L.dense_init(k2, (cfg.d_model, cfg.vocab)),
+    }
+
+
+# --- SSD core ---------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (b, l, h, p) — dt-scaled inputs
+    dA: jnp.ndarray,  # (b, l, h)   — log decay per step (≤ 0)
+    B: jnp.ndarray,  # (b, l, g, n)
+    C: jnp.ndarray,  # (b, l, g, n)
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # (b, h, n, p)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD dual form → (y (b, l, h, p), final state (b, h, n, p)).
+
+    Within a chunk: quadratic masked-matmul (attention-like, MXU-friendly).
+    Across chunks: linear recurrence over per-chunk states (lax.scan).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    if l % chunk:
+        raise ValueError(f"seq {l} not divisible by chunk {chunk}")
+    nc = l // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    A_cs = jnp.cumsum(dAc, axis=2)  # inclusive within-chunk cumsum
+    A_end = A_cs[:, :, -1]  # (b, nc, h)
+
+    # Intra-chunk: y_i += Σ_{j≤i} C_i·B_j · exp(A_cs_i − A_cs_j) · x_j
+    CB = jnp.einsum("bkigN,bkjgN->bkgij", Cc.astype(f32), Bc.astype(f32))
+    CB = jnp.repeat(CB, hg, axis=2)  # (b, nc, h, c, c)
+    decay = jnp.exp(A_cs[:, :, :, None, :] - A_cs[:, :, None, :, :])
+    decay = jnp.where(
+        jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None],
+        decay.transpose(0, 1, 2, 3, 4),
+        0.0,
+    )
+    # decay computed as (b, nc, i, j, h) → move h forward
+    M = CB * decay.transpose(0, 1, 4, 2, 3)
+    y_intra = jnp.einsum("bkhij,bkjhp->bkihp", M, xc.astype(f32))
+
+    # Per-chunk end states: S_k = Σ_j exp(A_end − A_cs_j) B_j x_j^T
+    dec_state = jnp.exp(A_end[:, :, None, :] - A_cs)  # (b, nc, c, h)
+    Bh = jnp.repeat(Bc, hg, axis=3).reshape(b, nc, chunk, h, n)
+    S = jnp.einsum(
+        "bkchn,bkchp->bkhnp",
+        (Bh.astype(f32) * dec_state[..., None]),
+        xc.astype(f32),
+    )
+
+    # Inter-chunk recurrence: S_run_k = exp(A_end_k)·S_run_{k-1} + S_k
+    def scan_fn(s_prev, inp):
+        a_end, s_k = inp
+        s_new = jnp.exp(a_end)[:, :, None, None] * s_prev + s_k
+        return s_new, s_prev  # emit the state ENTERING chunk k
+
+    s0 = (
+        jnp.zeros((b, h, n, p), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+    final_state, S_prev = jax.lax.scan(
+        scan_fn,
+        s0,
+        (A_end.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)),
+    )
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)  # (b, nc, h, n, p)
+
+    # Inter-chunk contribution: y_i += C_i · exp(A_cs_i) · S_prev
+    Ch = jnp.repeat(Cc, hg, axis=3).reshape(b, nc, chunk, h, n)
+    y_inter = jnp.einsum(
+        "bkchn,bkhnp->bkchp",
+        Ch.astype(f32) * jnp.exp(A_cs)[..., None],
+        S_prev,
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_sequential(x, dA, B, C, initial_state=None):
+    """Step-by-step oracle for :func:`ssd_chunked` (tests)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, hg, axis=2).astype(f32)
+    Ch = jnp.repeat(C, hg, axis=2).astype(f32)
+
+    def step(state, t):
+        a = jnp.exp(dA[:, t].astype(f32))  # (b, h)
+        upd = jnp.einsum("bhn,bhp->bhnp", Bh[:, t], x[:, t].astype(f32))
+        state = a[:, :, None, None] * state + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state)
+        return state, y
+
+    s0 = (
+        jnp.zeros((b, h, n, p), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+    state, ys = jax.lax.scan(step, s0, jnp.arange(l))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+# --- block -------------------------------------------------------------------
+
+
+def _split_in_proj(proj, cfg: ModelConfig):
+    dv, h, p, g, n, conv_ch = _dims(cfg)
+    z = proj[..., :dv]
+    xBC = proj[..., dv : dv + conv_ch]
+    dt = proj[..., dv + conv_ch :]
+    return z, xBC, dt
+
+
+def ssm_block(x, blk: Params, cfg: ModelConfig, use_pallas_conv: bool):
+    """Full mamba2 mixer over (b, l, d)."""
+    b, l, d = x.shape
+    dv, h, p, g, n, conv_ch = _dims(cfg)
+    proj = x @ blk["in_proj"]
+    z, xBC, dt = _split_in_proj(proj, cfg)
+    if use_pallas_conv:
+        xBC = kops.conv1d_depthwise(
+            xBC, blk["conv_w"].astype(x.dtype), activation="none"
+        ) + blk["conv_b"].astype(x.dtype)
+        xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    else:
+        from repro.kernels import ref as kref
+
+        xBC = kref.conv1d_depthwise_causal(xBC, blk["conv_w"].astype(x.dtype))
+        xBC = xBC + blk["conv_b"].astype(x.dtype)
+        xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :dv].reshape(b, l, h, p)
+    B = xBC[..., dv : dv + g * n].reshape(b, l, g, n)
+    C = xBC[..., dv + g * n :].reshape(b, l, g, n)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + blk["dt_bias"].astype(jnp.float32)
+    )  # (b, l, h)
+    A = -jnp.exp(blk["A_log"].astype(jnp.float32))  # (h,)
+    dA = dt * A  # (b, l, h)
+    x_in = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, _ = ssd_chunked(x_in, dA, B, C, min(cfg.ssm_chunk, l))
+    y = y + blk["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, l, dv)
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(gated.astype(x.dtype), blk["ssm_norm"], cfg.norm_eps)
+    return y @ blk["out_proj"]
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, **_):
+    from repro.models.transformer import cast_params
+
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "act_bsd")
+    use_pallas = jax.default_backend() == "tpu"
+
+    def block(xc, blk):
+        out = xc + ssm_block(
+            L.rms_norm(xc, blk["ln1"], cfg.norm_eps), blk, cfg, use_pallas
+        )
+        return constrain(out, "act_bsd")
+
+    if cfg.remat != "none":
+        block = jax.checkpoint(
+            block,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+
+    def scan_body(carry, blk):
+        return block(carry, cast_params(blk, cfg.dtype)), 0.0
+
+    from repro.models.transformer import scan_layers
+
+    x, _ = scan_layers(scan_body, x, params["blocks"], cfg.analysis_unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ constrain(params["unembed"].astype(cfg.dtype), "unembed_dv")
+    return constrain(logits, "logits_bsv"), jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    loss = L.token_xent(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"xent": loss}
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> SSMCache:
+    del max_len  # O(1) state — the whole point of the SSM family
+    dv, h, p, g, n, conv_ch = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv_kernel - 1, conv_ch),
+            jnp.float32,
+        ),
+        state=jnp.zeros((cfg.n_layers, batch, h, n, p), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, cache: SSMCache):
+    """One recurrent decode step — O(1) in context length."""
+    from repro.models.transformer import cast_params
+
+    b = tokens.shape[0]
+    dv, h, p, g, n, conv_ch = _dims(cfg)
+    x = params["embed"][tokens].astype(cfg.dtype)  # (b, 1, d)
+
+    def scan_body(carry, scanned):
+        (xc,) = carry
+        blk, conv_st, ssm_st = scanned
+        blk = cast_params(blk, cfg.dtype)
+        xin = L.rms_norm(xc, blk["ln1"], cfg.norm_eps)
+        proj = xin @ blk["in_proj"]
+        z, xBC, dt = _split_in_proj(proj, cfg)
+        # conv over the (k-1) carried inputs + current
+        window = jnp.concatenate(
+            [conv_st.astype(xc.dtype), xBC], axis=1
+        )  # (b, k, ch)
+        conv = jnp.einsum("bkc,kc->bc", window, blk["conv_w"]) + blk["conv_b"]
+        conv = jax.nn.silu(conv.astype(jnp.float32)).astype(xc.dtype)
+        new_conv_st = window[:, 1:].astype(jnp.float32)
+        xs = conv[..., :dv].reshape(b, h, p)
+        B = conv[..., dv : dv + g * n].reshape(b, g, n)
+        C = conv[..., dv + g * n :].reshape(b, g, n)
+        dtv = jax.nn.softplus(
+            dt[:, 0].astype(jnp.float32) + blk["dt_bias"].astype(jnp.float32)
+        )  # (b, h)
+        A = -jnp.exp(blk["A_log"].astype(jnp.float32))
+        a = jnp.exp(dtv * A)  # (b, h)
+        hg = h // g
+        Bh = jnp.repeat(B, hg, axis=1).astype(jnp.float32)
+        Ch = jnp.repeat(C, hg, axis=1).astype(jnp.float32)
+        upd = jnp.einsum(
+            "bhn,bhp->bhnp", Bh, xs.astype(jnp.float32) * dtv[..., None]
+        )
+        new_state = a[:, :, None, None] * ssm_st + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+        y = y + blk["D"].astype(jnp.float32)[None, :, None] * xs.astype(
+            jnp.float32
+        )
+        y = y.reshape(b, 1, dv)
+        gated = y * jax.nn.silu(z.astype(jnp.float32))
+        y = L.rms_norm(gated.astype(xc.dtype), blk["ssm_norm"], cfg.norm_eps)
+        out = xc + y @ blk["out_proj"]
+        return (out,), (new_conv_st, new_state)
+
+    from repro.models.transformer import scan_layers
+
+    (x,), (conv_new, state_new) = scan_layers(
+        scan_body, (x,), (params["blocks"], cache.conv, cache.state),
+        cfg.analysis_unroll,
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ constrain(params["unembed"].astype(cfg.dtype), "unembed_dv")
+    return logits[:, 0], SSMCache(conv_new, state_new, cache.length + 1)

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW, LR schedules, global-norm clipping."""
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)

@@ -1,0 +1,120 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and warmup +
+cosine decay — the production default for every arch in the zoo.
+
+Kept dependency-free (no optax in this container) and pytree-shaped so
+optimizer states inherit parameter shardings under pjit: each moment
+tensor has the SAME shape as its parameter, so `param_shardings` applies
+verbatim — with FSDP enabled the Adam moments are sharded too (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # ()
+    mu: Any  # pytree like params
+    nu: Any
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    floor = cfg.lr_min_ratio
+    return cfg.lr_peak * warm * (floor + (1.0 - floor) * cos)
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+_NO_DECAY = ("ln", "norm", "bias", "b_", "bq", "bk", "bv", "bo", "A_log",
+             "dt_bias", "D", "a_param", "pos")
+
+
+def _decays(path) -> bool:
+    name = "/".join(
+        str(getattr(p, "key", getattr(p, "name", p))) for p in path
+    )
+    leaf = name.rsplit("/", 1)[-1]
+    return not any(k in leaf for k in _NO_DECAY)
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, state: OptState, params: Any
+) -> tuple[Any, OptState, dict[str, jnp.ndarray]]:
+    """One AdamW step → (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * gf
+        v_new = b2 * v + (1.0 - b2) * jnp.square(gf)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if _decays(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    p_flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_flat = jax.tree_util.tree_leaves(grads)
+    m_flat = jax.tree_util.tree_leaves(state.mu)
+    v_flat = jax.tree_util.tree_leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(p_flat, g_flat, m_flat, v_flat):
+        pn, mn, vn = upd(path, p, g, m, v)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    unflat = jax.tree_util.tree_unflatten
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        unflat(treedef, new_p),
+        OptState(step, unflat(treedef, new_m), unflat(treedef, new_v)),
+        metrics,
+    )

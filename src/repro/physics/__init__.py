@@ -1,0 +1,3 @@
+"""The paper's test problems: cross-correlation baselines, the diffusion
+equation (Sec. 3.2), and compressible non-ideal MHD (Sec. 3.3 / App. A),
+all built on the fused stencil engine in :mod:`repro.core`."""

@@ -1,0 +1,181 @@
+"""End-to-end system behaviour tests: training convergence on learnable
+data, decode-vs-forward consistency per family, MoE routing behaviour,
+and small-mesh jit step integration (the dry-run path on 8 CPU devices,
+actually executed)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.registry import (  # noqa: E402
+    SHAPES,
+    get_config,
+    get_model,
+    reduced_config,
+)
+from repro.data import MarkovLMDataset  # noqa: E402
+from repro.distrib import sharding as shlib  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.launch.specs import (  # noqa: E402
+    abstract_decode_cache,
+    train_input_specs,
+)
+from repro.launch.steps import jit_serve_step, jit_train_step  # noqa: E402
+from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+
+
+def test_training_reduces_loss_on_markov_data():
+    """A small dense model must learn an order-1 Markov chain."""
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-3b"),
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=64, dtype="float32", remat="none",
+    )
+    api = get_model(cfg)
+    ds = MarkovLMDataset(vocab=64, seq_len=64, branching=4, seed=1)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.optim import adamw_update
+
+    opt_cfg = AdamWConfig(lr_peak=5e-3, warmup_steps=5, total_steps=80)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(api.lm_loss, has_aux=True)(
+            params, cfg, batch
+        )
+        params, opt, _ = adamw_update(opt_cfg, g, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for i in range(80):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i, 0, 16).items()}
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+    # entropy rate ln(4) ≈ 1.386; untrained ≈ ln(64) ≈ 4.16
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2.5-3b", "mamba2-780m",
+                                     "recurrentgemma-9b", "mixtral-8x7b"])
+def test_decode_matches_forward(arch_id):
+    """Step-by-step decode must reproduce teacher-forced logits.
+
+    MoE needs drop-free capacity: training-path capacity drops are a
+    batch-level effect the per-token decode path (correctly) lacks."""
+    cfg = dataclasses.replace(reduced_config(get_config(arch_id)),
+                              dtype="float32", capacity_factor=8.0)
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = api.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+    logits_full, _ = api.forward(params, cfg, tokens)
+    cache = api.init_decode_cache(cfg, 2, 16)
+    errs = []
+    for t in range(12):
+        lg, cache = api.decode_step(params, cfg, tokens[:, t : t + 1], cache)
+        errs.append(float(jnp.abs(lg - logits_full[:, t]).max()))
+    assert max(errs) < 5e-4, errs
+
+
+def test_moe_routes_to_multiple_experts():
+    from repro.models.moe import init_moe_params, moe_ffn, router_topk
+
+    cfg = reduced_config(get_config("qwen3-moe-30b-a3b"))
+    key = jax.random.PRNGKey(0)
+    p = jax.tree.map(lambda x: x[0], init_moe_params(cfg, key, 1))
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    out, aux = moe_ffn(x, p, cfg)
+    assert out.shape == x.shape
+    # balanced-ish routing at init: aux near its floor of 1.0
+    assert 0.9 < float(aux) < 3.0
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    gates, idx, _ = router_topk(logits[None], cfg.top_k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_moe_capacity_drops_overflow():
+    from repro.models.moe import init_moe_params, moe_ffn
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("qwen3-moe-30b-a3b")),
+        capacity_factor=0.05,
+    )
+    key = jax.random.PRNGKey(0)
+    p = jax.tree.map(lambda x: x[0], init_moe_params(cfg, key, 1))
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    out_tight, _ = moe_ffn(x, p, cfg)
+    out_loose, _ = moe_ffn(
+        x, p, dataclasses.replace(cfg, capacity_factor=2.0)
+    )
+    assert float(jnp.abs(out_tight).mean()) < 0.5 * float(
+        jnp.abs(out_loose).mean()
+    )
+
+
+def test_jit_train_step_on_8_device_mesh():
+    """The dry-run lowering path, actually EXECUTED on 8 fake devices."""
+    cfg = dataclasses.replace(
+        reduced_config(get_config("qwen2.5-3b")), dtype="float32"
+    )
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32,
+                                global_batch=4)
+    with shlib.rules_context(mesh):
+        batch_abs = train_input_specs(cfg, shape)
+        step, (p_sh, o_sh, b_sh) = jit_train_step(
+            cfg, mesh, batch_abs, donate=False
+        )
+        api = get_model(cfg)
+        params = jax.device_put(
+            api.init_params(cfg, jax.random.PRNGKey(0)), p_sh
+        )
+        opt = jax.device_put(adamw_init(params), o_sh)
+        key = jax.random.PRNGKey(1)
+        tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab)
+        batch = {
+            "tokens": jax.device_put(tokens, b_sh["tokens"]),
+            "labels": jax.device_put(jnp.roll(tokens, -1, 1),
+                                     b_sh["labels"]),
+        }
+        params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, params2,
+    )
+    assert max(jax.tree_util.tree_leaves(delta)) > 0.0
+
+
+def test_jit_serve_step_on_8_device_mesh():
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mamba2-780m")), dtype="float32"
+    )
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=64,
+                                global_batch=4)
+    with shlib.rules_context(mesh):
+        cache_abs = abstract_decode_cache(cfg, shape)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((4, 1), jnp.int32)}
+        step, (p_sh, c_sh, b_sh) = jit_serve_step(
+            cfg, mesh, batch_abs, cache_abs, donate_cache=False
+        )
+        api = get_model(cfg)
+        params = jax.device_put(
+            api.init_params(cfg, jax.random.PRNGKey(0)), p_sh
+        )
+        cache = jax.device_put(api.init_decode_cache(cfg, 4, 64), c_sh)
+        tokens = jax.device_put(jnp.zeros((4, 1), jnp.int32),
+                                b_sh["tokens"])
+        logits, cache2 = step(params, cache, {"tokens": tokens})
+    assert logits.shape == (4, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache2.length) == 1
