@@ -11,13 +11,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.util import emit, time_fn
+from benchmarks.util import emit, smoke, time_fn
 from repro.core.rooflinelib import TPU_V5E
 from repro.kernels import ops
 
 
 def run(full: bool = False) -> None:
     sizes_mib = (1, 4, 16, 64) if not full else (1, 2, 4, 8, 16, 32, 64, 128)
+    if smoke():
+        sizes_mib = (1, 4)
     g = jnp.ones((1,), jnp.float32)  # r = 0: f'_i = f_i
     for mib in sizes_mib:
         n = mib * 1024 * 1024 // 4

@@ -1,39 +1,71 @@
 """Paper Fig. 14 / C1: tuning-parameter exploration — block-shape sweep
 for the fused 3-D kernel (the __launch_bounds__/thread-block analogue on
-TPU), via the autotune harness: structural cost-model ranking + measured
-timing of the top candidates."""
+TPU), driven by the persistent tuning subsystem: structural cost-model
+ranking, measured timing of the top candidates (``force=True`` so the
+benchmark always re-measures), and the winner recorded in the on-disk
+cache that ``block="auto"`` call sites replay."""
 from __future__ import annotations
 
-import numpy as np
+import jax
 
-from benchmarks.util import emit
-from repro.core.autotune import enumerate_candidates, time_candidate
+from benchmarks.util import emit, smoke
 from repro.physics.mhd import MHDSolver, N_FIELDS
+from repro.tuning import (
+    TuningSession,
+    default_session,
+    format_block,
+    fused3d_candidates,
+    fused3d_key,
+    time_candidate,
+)
 
 
 def run(full: bool = False) -> None:
     n = 32 if full else 16
     shape = (n, n, n)
-    cands = enumerate_candidates(
-        shape, (3, 3, 3), N_FIELDS, N_FIELDS, 4,
-        tx_options=(16, 32, 64) if not full else (32, 64, 128),
-        ty_options=(4, 8, 16),
-        tz_options=(4, 8, 16),
-    )
     solver0 = MHDSolver(shape, strategy="swc")
     f0 = solver0.init_fields()
-    import jax
+    radii = solver0.rhs_op().radius_per_axis
+    key = fused3d_key(
+        shape, radii, N_FIELDS, N_FIELDS, str(f0.dtype), "swc"
+    )
+    cands = fused3d_candidates(
+        shape, radii, N_FIELDS, N_FIELDS, f0.dtype.itemsize
+    )
+    by_block = {c.block: c for c in cands}
 
-    for cand in cands[: (8 if full else 4)]:
-        solver = MHDSolver(shape, strategy="swc", block=cand.block)
+    iters = 1 if smoke() else 3
+    session = TuningSession(
+        cache=default_session().cache,
+        top_k=2 if smoke() else (8 if full else 4),
+        warmup=1,
+        iters=iters,
+        # Smoke timings are single-iteration noise: stamp them "smoke" so
+        # full-protocol callers (repro.tuning warm, eager auto sites)
+        # re-measure instead of replaying them forever.
+        record_source="smoke" if smoke() else "measured",
+    )
+
+    def measure(block):
+        solver = MHDSolver(shape, strategy="swc", block=block)
         rhs = jax.jit(solver.rhs)
-        try:
-            t = time_candidate(lambda: rhs(f0), warmup=1, iters=3)
-        except Exception:
-            continue  # discarded launch (paper protocol)
-        emit(
-            f"fig14/blocktune/{'x'.join(map(str, cand.block))}", t,
+        return time_candidate(lambda: rhs(f0), warmup=1, iters=iters)
+
+    # Full runs re-measure unconditionally (that IS the benchmark); a
+    # --smoke run must not overwrite a properly measured record with a
+    # single-iteration winner, so it only fills a cold cache.
+    record = session.tune(key, cands, measure, force=not smoke())
+    winner = format_block(record.block)
+    for blk_s, us in sorted(
+        record.timings_us.items(), key=lambda kv: kv[1]
+    ):
+        cand = by_block.get(tuple(int(x) for x in blk_s.split("x")))
+        derived = (
             f"vmem_KiB={cand.vmem_bytes // 1024};"
             f"halo_overhead={cand.halo_overhead:.2f};"
-            f"model_score={cand.score:.3f}",
+            f"model_score={cand.score:.3f};"
+        ) if cand is not None else ""
+        emit(
+            f"fig14/blocktune/{blk_s}", us / 1e6,
+            derived + f"winner={int(blk_s == winner)}",
         )

@@ -1,17 +1,23 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` also
+archives the rows (plus device + git sha) for the CI perf trajectory.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-sized
     PYTHONPATH=src python -m benchmarks.run --only fig13
+    PYTHONPATH=src python -m benchmarks.run --only fig06 --smoke \
+        --json BENCH_fig06.json                        # CI artifact
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import subprocess
 
+from benchmarks import util
 from benchmarks.util import header
 
 MODULES = (
@@ -26,6 +32,44 @@ MODULES = (
     "table3_energy",
 )
 
+JSON_SCHEMA = 1
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            check=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _device() -> str:
+    from repro.tuning.cache import current_backend
+
+    return current_backend()
+
+
+def write_json(path: str) -> None:
+    """Archive the emitted rows. Row schema: name, us_per_call, derived,
+    device, git_sha (the CI workflow uploads these as BENCH_*.json)."""
+    device, sha = _device(), _git_sha()
+    rows = [
+        {**row, "device": device, "git_sha": sha} for row in util.ROWS
+    ]
+    payload = {
+        "schema": JSON_SCHEMA,
+        "device": device,
+        "git_sha": sha,
+        "smoke": util.smoke(),
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(rows)} row(s) to {path}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -33,13 +77,23 @@ def main() -> None:
                     help="paper-sized problems (hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-iteration shrunk-size run (CI plumbing "
+                         "check; timings not trustworthy)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (device + git sha "
+                         "stamped) for artifact archiving")
     args = ap.parse_args()
+    if args.smoke:
+        util.set_smoke(True)
     header()
     for name in MODULES:
         if args.only and args.only not in name:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
         mod.run(full=args.full)
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

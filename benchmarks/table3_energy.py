@@ -9,7 +9,6 @@ throughput instead.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.util import emit
 from repro.core.rooflinelib import TPU_V5E, stencil_ideal_bytes

@@ -1,5 +1,6 @@
 """Benchmark utilities: timing protocol (paper Sec. 5.1 — warm-up, then
-median of timed iterations, explicit synchronization) and CSV output."""
+median of timed iterations, explicit synchronization), CSV output, and
+machine-readable row collection for ``run.py --json``."""
 from __future__ import annotations
 
 import time
@@ -7,9 +8,29 @@ import time
 import jax
 import numpy as np
 
+# Rows emitted so far: {"name", "us_per_call", "derived"} dicts, consumed
+# by run.py --json for the CI perf-trajectory artifacts.
+ROWS: list[dict] = []
+
+_SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    """Smoke mode (CI): single timed iteration, minimal warm-up, and
+    modules may shrink problem sizes — correctness-of-plumbing runs, not
+    trustworthy timings."""
+    global _SMOKE
+    _SMOKE = on
+
+
+def smoke() -> bool:
+    return _SMOKE
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median seconds per call, block_until_ready-synchronized."""
+    if _SMOKE:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -22,7 +43,9 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """``name,us_per_call,derived`` CSV row (assignment contract)."""
-    print(f"{name},{seconds * 1e6:.1f},{derived}")
+    us = seconds * 1e6
+    ROWS.append({"name": name, "us_per_call": us, "derived": derived})
+    print(f"{name},{us:.1f},{derived}")
 
 
 def header() -> None:

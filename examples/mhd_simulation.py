@@ -71,11 +71,20 @@ def main() -> None:
     print(f"\n{args.steps} steps in {wall:.1f}s "
           f"({ups/1e6:.2f} Mupdates/s on CPU)")
 
-    # Strategy cross-check mid-state (the paper's verification protocol).
+    # Strategy cross-check mid-state (the paper's verification protocol),
+    # with the SWC block resolved by the persistent autotuner: a cache
+    # hit replays the recorded winner, a miss runs the paper's
+    # rank-then-measure search once and persists it.
+    from repro.tuning import format_block, lookup_fused3d
+
     swc = MHDSolver((args.n,) * 3, params=solver.params, strategy="swc",
-                    block=(8, 8, args.n))
+                    block="auto")
     err = float(jnp.abs(solver.rhs(f) - swc.rhs(f)).max())
     scale = float(jnp.abs(solver.rhs(f)).max())
+    rec = lookup_fused3d(f, swc.operator_set, f.shape[0], "swc")
+    if rec is not None:
+        print(f"auto-tuned SWC block: {format_block(rec.block)} "
+              f"[{rec.source}]")
     print(f"HWC vs SWC on evolved state: max abs diff {err:.2e} "
           f"(field scale {scale:.2e})")
     assert err <= 1e-4 * max(scale, 1.0)

@@ -1,151 +1,29 @@
-"""Automated tuning — the paper's Sec. 5.1 protocol on TPU terms.
+"""Deprecated alias — the autotuner was promoted to ``repro.tuning``.
 
-The paper tunes thread-block dimensions (τx, τy, τz) with a pruned
-heuristic search: τx a multiple of the L2-line/word ratio, total threads
-a multiple of warp size, invalid launches discarded, 3-iteration timing,
-best picked. The TPU analogues (DESIGN.md §2):
-
-* τx multiple of the 128-wide lane dimension (vector register width),
-* the VMEM working set must fit the per-core VMEM budget (invalid
-  "launches" = blocks that exceed VMEM → discarded *statically*),
-* per-candidate timing = warm-up + median of k timed calls.
-
-Additionally a *structural* cost model ranks candidates without hardware
-— used on this CPU-only container and as a search-space pruner on real
-TPUs (napkin math first, measurement second).
+This shim keeps old imports working (``from repro.core.autotune import
+enumerate_candidates`` etc.); new code should import from
+``repro.tuning`` which adds the persistent cache, the TuningSession
+protocol, and the ``block="auto"`` resolvers.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Iterable, Sequence
+import warnings
 
-import jax
-import numpy as np
+from repro.tuning.costmodel import (  # noqa: F401
+    Candidate,
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET,
+    autotune,
+    enumerate_candidates,
+    halo_overhead,
+    time_candidate,
+    vmem_working_set,
+)
 
-# Conservative per-core VMEM budget (bytes). v4/v5 expose ~16 MiB per
-# core to Pallas; we leave headroom for the output block + spills.
-VMEM_BUDGET = 12 * 1024 * 1024
-LANE = 128
-SUBLANE = 8
-
-
-@dataclasses.dataclass(frozen=True)
-class Candidate:
-    block: tuple[int, int, int]
-    vmem_bytes: int
-    halo_overhead: float  # redundant-fetch fraction vs perfect reuse
-    score: float  # structural cost-model score (lower = better)
-
-
-def vmem_working_set(
-    block: tuple[int, int, int],
-    radii: tuple[int, int, int],
-    n_f: int,
-    n_out: int,
-    itemsize: int,
-) -> int:
-    tz, ty, tx = block
-    rz, ry, rx = radii
-    inp = n_f * (tz + 2 * rz) * (ty + 2 * ry) * (tx + 2 * rx)
-    out = n_out * tz * ty * tx
-    # Pallas double-buffers pipelined blocks: 2x input.
-    return (2 * inp + out) * itemsize
-
-
-def halo_overhead(
-    block: tuple[int, int, int], radii: tuple[int, int, int]
-) -> float:
-    tz, ty, tx = block
-    rz, ry, rx = radii
-    fetched = (tz + 2 * rz) * (ty + 2 * ry) * (tx + 2 * rx)
-    useful = tz * ty * tx
-    return fetched / useful - 1.0
-
-
-def enumerate_candidates(
-    domain: tuple[int, int, int],
-    radii: tuple[int, int, int],
-    n_f: int,
-    n_out: int,
-    itemsize: int = 4,
-    *,
-    vmem_budget: int = VMEM_BUDGET,
-    tx_options: Sequence[int] = (128, 256, 512),
-    ty_options: Sequence[int] = (4, 8, 16, 32),
-    tz_options: Sequence[int] = (2, 4, 8, 16, 32),
-) -> list[Candidate]:
-    """Generate, filter (divisibility + VMEM), and rank block shapes."""
-    nz, ny, nx = domain
-    out: list[Candidate] = []
-    for tx in tx_options:
-        if nx % tx and tx != nx:
-            continue
-        tx_eff = min(tx, nx)
-        for ty in ty_options:
-            if ny % ty and ty != ny:
-                continue
-            ty_eff = min(ty, ny)
-            for tz in tz_options:
-                if nz % tz and tz != nz:
-                    continue
-                tz_eff = min(tz, nz)
-                blk = (tz_eff, ty_eff, tx_eff)
-                vm = vmem_working_set(blk, radii, n_f, n_out, itemsize)
-                if vm > vmem_budget:
-                    continue  # the "failed launch" discard
-                ho = halo_overhead(blk, radii)
-                # Structural score: effective HBM traffic multiplier, with
-                # a mild penalty for lane-misaligned x tiles and very
-                # small z tiles (pipeline bubble per block).
-                align_pen = 0.0 if tx_eff % LANE == 0 else 0.15
-                bubble_pen = 0.05 if tz_eff < 4 else 0.0
-                score = (1.0 + ho) * (1.0 + align_pen + bubble_pen)
-                out.append(Candidate(blk, vm, ho, score))
-    out.sort(key=lambda c: c.score)
-    return out
-
-
-def time_candidate(
-    fn: Callable[[], jax.Array],
-    *,
-    warmup: int = 2,
-    iters: int = 5,
-) -> float:
-    """Median wall-clock seconds (paper: warm-up then median of timed
-    iterations, block_until_ready for proper synchronization)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
-
-
-def autotune(
-    make_fn: Callable[[tuple[int, int, int]], Callable[[], jax.Array]],
-    candidates: Iterable[Candidate],
-    *,
-    top_k: int = 4,
-    warmup: int = 2,
-    iters: int = 5,
-) -> tuple[Candidate, dict[tuple[int, int, int], float]]:
-    """Measure the ``top_k`` structurally-ranked candidates and return the
-    winner plus the full timing table (the paper's search, with the cost
-    model as the pruner)."""
-    timings: dict[tuple[int, int, int], float] = {}
-    best: tuple[float, Candidate] | None = None
-    for cand in list(candidates)[:top_k]:
-        try:
-            fn = make_fn(cand.block)
-            t = time_candidate(fn, warmup=warmup, iters=iters)
-        except Exception:
-            continue  # discarded launch
-        timings[cand.block] = t
-        if best is None or t < best[0]:
-            best = (t, cand)
-    if best is None:
-        raise RuntimeError("no candidate ran successfully")
-    return best[1], timings
+warnings.warn(
+    "repro.core.autotune moved to repro.tuning (persistent cache + "
+    "TuningSession); this alias will be removed",
+    DeprecationWarning,
+    stacklevel=2,
+)

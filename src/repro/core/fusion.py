@@ -49,12 +49,20 @@ class FusedStencilOp:
     n_out: int
     boundary_mode: str = "periodic"
     strategy: str = "hwc"
-    block: tuple[int, int, int] = (8, 8, 128)
+    # (τz, τy, τx), or "auto" to consult the persistent tuning cache
+    # (repro.tuning): cache-hit fast path, rank-and-measure on an eager
+    # miss, structural cost-model winner under jit tracing.
+    block: tuple[int, int, int] | str = (8, 8, 128)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(
                 f"strategy {self.strategy!r} not in {STRATEGIES}"
+            )
+        if isinstance(self.block, str) and self.block != "auto":
+            raise ValueError(
+                f"block must be a (τz, τy, τx) tuple or 'auto', "
+                f"got {self.block!r}"
             )
 
     @property

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache
-from typing import Mapping, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -21,7 +21,6 @@ All operate inside ``shard_map``; tests validate vs plain psum on the
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -70,7 +69,9 @@ def hierarchical_psum(
     Equivalent to psum over both axes; moves only 1/|fast| of the bytes
     over the slow (cross-pod) links.
     """
-    n_fast = lax.axis_size(fast_axis)
+    from repro.core.halo import axis_size
+
+    n_fast = axis_size(fast_axis)
     orig_shape = x.shape
     pad = (-x.shape[0]) % n_fast
     if pad:

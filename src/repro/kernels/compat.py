@@ -1,0 +1,35 @@
+"""Pallas API compatibility across jax versions.
+
+The kernels express overlapping input windows (block + halo) with
+per-element block offsets. Newer jax spells this ``pl.Element`` per
+dimension; jax <= 0.4.x spells it ``indexing_mode=pl.Unblocked()`` for
+the whole spec. Both semantics are identical for our specs because the
+non-window dimensions always use offset 0 (full extent) or a squeezed
+``None`` dim, where block index == element offset.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from jax.experimental import pallas as pl
+
+HAS_ELEMENT = hasattr(pl, "Element")
+
+
+def element_window_spec(
+    block_shape: Sequence[int | None],
+    index_map: Callable[..., tuple],
+    window_dims: Sequence[int],
+) -> pl.BlockSpec:
+    """BlockSpec whose ``window_dims`` take *element* offsets from the
+    index map (overlapping halo windows); remaining dims span the full
+    extent (or are squeezed with ``None``)."""
+    if HAS_ELEMENT:
+        shape = tuple(
+            pl.Element(s) if d in window_dims and s is not None else s
+            for d, s in enumerate(block_shape)
+        )
+        return pl.BlockSpec(shape, index_map)
+    return pl.BlockSpec(
+        tuple(block_shape), index_map, indexing_mode=pl.Unblocked()
+    )

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compat import element_window_spec
+
 
 def _kernel(x_ref, w_ref, o_ref, *, k, block_s, activation):
     acc = None
@@ -57,9 +59,10 @@ def conv1d_depthwise_pallas(
         kernel,
         grid=(b, s // block_seq),
         in_specs=[
-            pl.BlockSpec(
-                (None, pl.Element(block_seq + k - 1), c),
+            element_window_spec(
+                (None, block_seq + k - 1, c),
                 lambda ib, is_: (ib, is_ * block_seq, 0),
+                window_dims=(1,),
             ),
             pl.BlockSpec((k, c), lambda ib, is_: (0, 0)),
         ],

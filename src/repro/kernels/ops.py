@@ -1,16 +1,22 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels (inner bodies jit'd).
 
 These handle shape padding (block divisibility), dtype plumbing, the
-interpret-mode switch for CPU validation, and strategy selection, so
-callers (fusion engine, physics, models) never touch BlockSpecs.
+interpret-mode switch for CPU validation, strategy selection, and
+``"auto"`` block resolution through ``repro.tuning``, so callers
+(fusion engine, physics, models) never touch BlockSpecs.
 
 On CPU (this container) ``interpret`` defaults to True; on TPU it
 defaults to False. Override explicitly for tests.
+
+Block parameters accept ``"auto"``: the persistent tuning cache
+(``repro.tuning``) is consulted, and on a miss with concrete operands
+the paper's rank-then-measure protocol runs once and records the winner
+(under tracing the structural cost-model winner is used instead).
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Mapping
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -30,16 +36,18 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("strategy", "block_size", "unroll", "interpret"),
-)
+# The public xcorr1d is un-jitted (it resolves "auto" blocks eagerly);
+# keep the hwc early-return compiled like it was when xcorr1d itself
+# carried @jax.jit.
+_xcorr1d_hwc_jit = jax.jit(_ref.xcorr1d)
+
+
 def xcorr1d(
     f_padded: jnp.ndarray,
     g: jnp.ndarray,
     *,
     strategy: str = "baseline",
-    block_size: int = 2048,
+    block_size: int | str = 2048,
     unroll: int = 4,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -47,11 +55,38 @@ def xcorr1d(
 
     Accepts any n; pads the tail to a block multiple and slices back.
     ``strategy='hwc'`` dispatches to the pure-jnp/XLA-managed path.
+    ``block_size="auto"`` resolves through the tuning subsystem.
     """
     if interpret is None:
         interpret = _default_interpret()
     if strategy == "hwc":
-        return _ref.xcorr1d(f_padded, g)
+        return _xcorr1d_hwc_jit(f_padded, g)
+    if block_size == "auto":
+        from repro.tuning.session import auto_block_xcorr1d
+
+        block_size = auto_block_xcorr1d(
+            f_padded, g, strategy=strategy, unroll=unroll,
+            interpret=interpret,
+        )
+    return _xcorr1d_jit(
+        f_padded, g, strategy=strategy, block_size=block_size,
+        unroll=unroll, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("strategy", "block_size", "unroll", "interpret"),
+)
+def _xcorr1d_jit(
+    f_padded: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    strategy: str,
+    block_size: int,
+    unroll: int,
+    interpret: bool,
+) -> jnp.ndarray:
     n_taps = g.shape[0]
     n = f_padded.shape[0] - (n_taps - 1)
     n_pad = _round_up(n, block_size)
@@ -74,7 +109,7 @@ def fused_stencil3d(
     *,
     aux: jnp.ndarray | None = None,
     strategy: str = "swc",
-    block: tuple[int, int, int] = (8, 8, 128),
+    block: tuple[int, int, int] | str = (8, 8, 128),
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Fused φ(A·B) over a padded (n_f, z, y, x) domain (paper Eq. 9).
@@ -83,12 +118,20 @@ def fused_stencil3d(
     'swc_stream' (Pallas explicit z-streaming, paper Fig. 5b). Interior
     extents that don't divide the block are handled by shrinking the
     block to the largest divisor (physics domains are powers of two, so
-    in practice blocks are used as-given).
+    in practice blocks are used as-given). ``block="auto"`` consults the
+    persistent tuning cache (measuring on a miss when eager).
     """
     if interpret is None:
         interpret = _default_interpret()
     if strategy == "hwc":
         return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
+    if block == "auto":
+        from repro.tuning.session import auto_block_3d
+
+        block = auto_block_3d(
+            f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
+            interpret=interpret,
+        )
     rads = ops.radius_per_axis()
     interior = tuple(
         f_padded.shape[1 + a] - 2 * rads[a] for a in range(3)
@@ -109,20 +152,50 @@ def _largest_divisor_leq(n: int, cap: int) -> int:
     return 1
 
 
-@functools.partial(
-    jax.jit, static_argnames=("activation", "block_seq", "interpret")
-)
 def conv1d_depthwise(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
     activation: str = "none",
-    block_seq: int = 512,
+    block_seq: int | str | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Fused depthwise causal conv1d (+ SiLU) — mamba2 frontend stencil."""
+    """Fused depthwise causal conv1d (+ SiLU) — mamba2 frontend stencil.
+
+    ``block_seq=None`` (model call sites) uses 512 unless auto-tuning is
+    globally enabled (``repro.tuning.enable_auto()`` — the train/serve
+    drivers' ``--auto-tune``), in which case it resolves like ``"auto"``:
+    persistent cache first, measured tune on an eager miss.
+    """
     if interpret is None:
         interpret = _default_interpret()
+    if block_seq is None:
+        from repro.tuning.session import AUTO_ENABLED
+
+        block_seq = "auto" if AUTO_ENABLED else 512
+    if block_seq == "auto":
+        from repro.tuning.session import auto_block_conv1d
+
+        block_seq = auto_block_conv1d(
+            x, w, activation=activation, interpret=interpret
+        )
+    return _conv1d_depthwise_jit(
+        x, w, activation=activation, block_seq=block_seq,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_seq", "interpret")
+)
+def _conv1d_depthwise_jit(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    activation: str,
+    block_seq: int,
+    interpret: bool,
+) -> jnp.ndarray:
     b, s, c = x.shape
     block_seq = min(block_seq, _round_up(s, 128))
     s_pad = _round_up(s, block_seq)

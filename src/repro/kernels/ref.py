@@ -8,7 +8,7 @@ paper's L1/L2-managed implementations.
 """
 from __future__ import annotations
 
-from typing import Callable, Mapping
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compat import element_window_spec
+
 STRATEGIES = ("baseline", "pointwise", "elementwise")
 
 
@@ -120,9 +122,10 @@ def xcorr1d_pallas(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (pl.Element(block_size + halo),),
+            element_window_spec(
+                (block_size + halo,),
                 lambda i: (i * block_size,),
+                window_dims=(0,),
             ),
             pl.BlockSpec((g_taps,), lambda i: (0,)),  # g: whole, VMEM
         ],

@@ -33,7 +33,7 @@ The HWC ("let the compiler manage residency") strategy lives in
 from __future__ import annotations
 
 import functools
-from typing import Callable, Mapping
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import OperatorSet
+from repro.kernels.compat import element_window_spec
 
 
 def _block_derivs(
@@ -128,14 +129,10 @@ def fused_stencil3d_pallas(
     # auto-pipelined analogue of the paper's streamed z-axis.
     grid = (ny // ty, nx // tx, nz // tz)
     in_specs = [
-        pl.BlockSpec(
-            (
-                n_f,
-                pl.Element(tz + 2 * rz),
-                pl.Element(ty + 2 * ry),
-                pl.Element(tx + 2 * rx),
-            ),
+        element_window_spec(
+            (n_f, tz + 2 * rz, ty + 2 * ry, tx + 2 * rx),
             lambda j, k, i: (0, i * tz, j * ty, k * tx),
+            window_dims=(1, 2, 3),
         )
     ]
     operands = [f_padded]

@@ -25,11 +25,25 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="resolve Pallas kernel blocks from the persistent "
+                         "tuning cache (no effect on the pure-decode loop, "
+                         "which uses the recurrent einsum path; applies if "
+                         "a Pallas kernel enters the serving graph)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
+    if args.auto_tune:
+        from repro import tuning
+
+        tuning.enable_auto()
+        # Decode-only serving never launches the Pallas conv (the
+        # recurrent form is a per-token einsum), so there is nothing to
+        # pre-measure — the flag just arms "auto" resolution.
+        print(f"auto-tune: enabled; cache at {tuning.default_cache_dir()} "
+              f"(decode path has no Pallas kernels to warm)")
     if cfg.is_encdec:
         raise SystemExit("use examples/serve_batched.py for enc-dec")
     mesh = make_mesh((1, 1), ("data", "model"))

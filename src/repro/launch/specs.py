@@ -5,7 +5,6 @@ requirement e.2). Also builds abstract param/optimizer/cache trees via
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -6,18 +6,17 @@ one code path for both (assignment requirement e).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.registry import ShapeSpec, get_model
+from repro.configs.registry import get_model
 from repro.distrib import sharding as shlib
 from repro.models import layers as L
 from repro.models.config import ModelConfig
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 
 
 def batch_shardings(batch_abs: dict, mesh: Mesh, profile: str = "tp") -> dict:

@@ -15,11 +15,9 @@ with the production mesh (launch/mesh.py) — the only difference is the
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import get_config, get_model, reduced_config
@@ -51,11 +49,24 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--simulate-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="resolve Pallas kernel blocks from the persistent "
+                         "tuning cache (repro.tuning), pre-measuring this "
+                         "run's shapes before the first jitted step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
+    if args.auto_tune:
+        from repro import tuning
+
+        tuning.enable_auto()
+        warmed = tuning.warm_model_kernels(
+            cfg, args.global_batch, args.seq_len
+        )
+        print(f"auto-tune: {warmed} kernel shape(s) warmed; cache at "
+              f"{tuning.default_cache_dir()}")
     if cfg.is_encdec:
         raise SystemExit("use examples/ for enc-dec training demos")
     mesh = parse_mesh(args.mesh)

@@ -5,7 +5,6 @@ framework, so every layer composes with pjit/shard_map and scan.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax

@@ -12,7 +12,6 @@ supports 524k contexts) are implemented; tests assert they match.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -58,7 +58,9 @@ class DiffusionProblem:
         )
 
     def step_op(
-        self, strategy: str = "hwc", block: tuple[int, int, int] = (8, 8, 128)
+        self,
+        strategy: str = "hwc",
+        block: tuple[int, int, int] | str = (8, 8, 128),
     ) -> FusedStencilOp:
         spec = dataclasses.replace(self.merged_stencil(), name="step")  # type: ignore[arg-type]
         ops = OperatorSet((spec,))

@@ -232,7 +232,7 @@ class MHDSolver:
     params: MHDParams = MHDParams()
     accuracy: int = 6
     strategy: str = "hwc"
-    block: tuple[int, int, int] = (8, 8, 128)
+    block: tuple[int, int, int] | str = (8, 8, 128)  # or "auto"
     fuse_rk_axpy: bool = False  # beyond-paper: fold the RK update into φ
 
     @property

@@ -1,0 +1,49 @@
+"""Persistent block-shape autotuning (paper Sec. 5.1, Fig. 14).
+
+Layers:
+
+* ``costmodel`` — structural candidate enumeration + the measurement
+  protocol (promoted from ``repro.core.autotune``, which remains as a
+  deprecation shim);
+* ``cache``     — persistent per-platform JSON store
+  (``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-tune/``), schema-versioned;
+* ``session``   — structural-rank → measure-top-k → record, with a
+  cache-hit fast path; the ``block="auto"`` resolvers for the fused 3-D
+  stencil and the 1-D kernels live here;
+* ``cli``       — ``python -m repro.tuning warm|show|clear``.
+"""
+from repro.tuning.cache import (  # noqa: F401
+    SCHEMA_VERSION,
+    TuningCache,
+    TuningKey,
+    TuningRecord,
+    current_backend,
+    default_cache_dir,
+    format_block,
+)
+from repro.tuning.costmodel import (  # noqa: F401
+    Candidate,
+    Candidate1D,
+    LANE,
+    SUBLANE,
+    VMEM_BUDGET,
+    autotune,
+    domain_axis_options,
+    enumerate_candidates,
+    enumerate_candidates_1d,
+    halo_overhead,
+    time_candidate,
+    vmem_working_set,
+)
+from repro.tuning.shapes import warm_model_kernels  # noqa: F401
+from repro.tuning.session import (  # noqa: F401
+    TuningSession,
+    auto_block_3d,
+    auto_block_conv1d,
+    auto_block_xcorr1d,
+    default_session,
+    enable_auto,
+    fused3d_candidates,
+    fused3d_key,
+    lookup_fused3d,
+)

@@ -1,0 +1,11 @@
+import signal
+
+from repro.tuning.cli import main
+
+# Die silently on a closed pipe (`... | head`) like standard unix tools.
+try:
+    signal.signal(signal.SIGPIPE, signal.SIG_DFL)
+except (AttributeError, ValueError):  # pragma: no cover - non-posix
+    pass
+
+raise SystemExit(main())

@@ -1,0 +1,224 @@
+"""Persistent on-disk tuning cache.
+
+The paper's central tuning result (Sec. 5.1, Fig. 14) is that block
+shapes must be re-tuned per platform — so winners are cached *per device
+kind* and reused across processes: tune once, run tuned forever after.
+
+Layout: one JSON file (``cache.json``) under ``$REPRO_TUNE_CACHE`` or
+``~/.cache/repro-tune/``, mapping a stable key string → record. Records
+carry a schema version; bumping ``SCHEMA_VERSION`` invalidates every old
+record (they are dropped at load). Writes are atomic (tmp + rename) and
+hold an advisory file lock around the read-merge-write, so concurrent
+processes on the same host compose instead of clobbering each other
+(on platforms without ``fcntl`` the merge still bounds the race: a lost
+record is simply re-measured later).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Union
+
+try:
+    import fcntl
+except ImportError:  # non-posix: fall back to lock-free merge
+    fcntl = None
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_TUNE_CACHE"
+
+Block = Union[int, tuple]
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return Path(env)
+    base = os.environ.get("XDG_CACHE_HOME")
+    root = Path(base) if base else Path.home() / ".cache"
+    return root / "repro-tune"
+
+
+def current_backend() -> str:
+    """Device kind of the default device (e.g. ``cpu``, ``TPU v5e``) —
+    the per-platform component of every tuning key."""
+    import jax
+
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "") or jax.default_backend()
+    return str(kind).replace("|", "/")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningKey:
+    """Everything that changes the optimal block shape."""
+
+    kernel: str  # "fused_stencil3d" | "xcorr1d" | "conv1d_depthwise" | ...
+    strategy: str  # "swc" | "swc_stream" | "baseline" | ...
+    domain: tuple[int, ...]  # interior extents
+    radii: tuple[int, ...]  # stencil radii (halo widths) per axis
+    n_f: int  # input fields
+    n_out: int  # output fields
+    dtype: str  # e.g. "float32"
+    backend: str  # device kind (per-platform tuning, the paper's point)
+
+    @property
+    def cache_id(self) -> str:
+        return "|".join(
+            (
+                self.kernel,
+                self.strategy,
+                "x".join(map(str, self.domain)),
+                "x".join(map(str, self.radii)),
+                str(self.n_f),
+                str(self.n_out),
+                self.dtype,
+                self.backend,
+            )
+        )
+
+
+@dataclasses.dataclass
+class TuningRecord:
+    """One tuning outcome: the winning block plus the full timing table
+    (µs per call, keyed by the block's string form) for inspection."""
+
+    block: Block
+    timings_us: dict[str, float]
+    source: str  # "measured" | "model" | "fallback"
+    schema: int = SCHEMA_VERSION
+    created: float = 0.0  # unix timestamp
+
+    def to_json(self) -> dict:
+        blk = list(self.block) if isinstance(self.block, tuple) else self.block
+        return {
+            "block": blk,
+            "timings_us": self.timings_us,
+            "source": self.source,
+            "schema": self.schema,
+            "created": self.created,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuningRecord":
+        blk = d["block"]
+        if isinstance(blk, list):
+            blk = tuple(blk)
+        return cls(
+            block=blk,
+            timings_us=dict(d.get("timings_us", {})),
+            source=d.get("source", "measured"),
+            schema=int(d.get("schema", -1)),
+            created=float(d.get("created", 0.0)),
+        )
+
+
+def format_block(block: Block) -> str:
+    if isinstance(block, tuple):
+        return "x".join(map(str, block))
+    return str(block)
+
+
+class TuningCache:
+    """In-memory view over the persistent JSON store."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.dir = Path(path) if path is not None else default_cache_dir()
+        self.file = self.dir / "cache.json"
+        self._mem: dict[str, TuningRecord] | None = None
+
+    # -- persistence --------------------------------------------------------
+
+    def _read_disk(self) -> dict[str, TuningRecord]:
+        try:
+            raw = json.loads(self.file.read_text())
+        except (OSError, ValueError):
+            return {}
+        records = raw.get("records") if isinstance(raw, dict) else None
+        if not isinstance(records, dict):
+            return {}  # corrupted/foreign content degrades to a re-tune
+        out: dict[str, TuningRecord] = {}
+        for key, rec in records.items():
+            try:
+                parsed = TuningRecord.from_json(rec)
+            except (KeyError, TypeError, ValueError, AttributeError):
+                continue
+            if parsed.schema != SCHEMA_VERSION:
+                continue  # schema bump invalidates old records
+            out[key] = parsed
+        return out
+
+    def _write_disk(self, records: dict[str, TuningRecord]) -> None:
+        self.dir.mkdir(parents=True, exist_ok=True)
+        payload = json.dumps(
+            {
+                "schema": SCHEMA_VERSION,
+                "records": {k: r.to_json() for k, r in records.items()},
+            },
+            indent=1,
+            sort_keys=True,
+        )
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                fh.write(payload)
+            os.replace(tmp, self.file)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _records(self) -> dict[str, TuningRecord]:
+        if self._mem is None:
+            self._mem = self._read_disk()
+        return self._mem
+
+    # -- public API ---------------------------------------------------------
+
+    def get(self, key: TuningKey) -> TuningRecord | None:
+        return self._records().get(key.cache_id)
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """Advisory exclusive lock serializing read-merge-write cycles
+        across processes (posix only; elsewhere the merge alone bounds
+        the race to a re-measure)."""
+        if fcntl is None:
+            yield
+            return
+        self.dir.mkdir(parents=True, exist_ok=True)
+        with open(self.dir / "cache.lock", "w") as fh:
+            fcntl.flock(fh, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(fh, fcntl.LOCK_UN)
+
+    def put(self, key: TuningKey, record: TuningRecord) -> None:
+        if not record.created:
+            record.created = time.time()
+        # Under the lock, disk wins for every key except the one being
+        # written now: every earlier put already wrote through, and our
+        # in-memory view may be staler than another process's upgrade.
+        with self._locked():
+            merged = self._read_disk()
+            merged[key.cache_id] = record
+            self._mem = merged
+            self._write_disk(merged)
+
+    def items(self) -> dict[str, TuningRecord]:
+        return dict(self._records())
+
+    def clear(self) -> None:
+        self._mem = {}
+        try:
+            self.file.unlink()
+        except OSError:
+            pass

@@ -1,0 +1,383 @@
+"""TuningSession — structural-rank → measure-top-k → record.
+
+The paper's Sec. 5.1 protocol, made persistent: the structural cost
+model prunes the block-shape space, the top-k survivors are timed on
+hardware (warm-up + median of timed calls), and the winner is recorded
+in the per-platform cache so every later process — and every
+``block="auto"`` call site — reuses it without re-measurement.
+
+Under ``jax.jit`` tracing no measurement is possible (there is no
+concrete operand to time), so the session falls back to the structural
+winner and records it as ``source="model"``; a later eager call or
+``python -m repro.tuning warm`` upgrades the record to ``"measured"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.tuning.cache import (
+    TuningCache,
+    TuningKey,
+    TuningRecord,
+    current_backend,
+    format_block,
+)
+from repro.tuning.costmodel import (
+    Candidate,
+    VMEM_BUDGET,
+    domain_axis_options,
+    enumerate_candidates,
+    enumerate_candidates_1d,
+    time_candidate,
+)
+
+# Total hardware measurements taken by sessions in this process. Tests
+# (and the acceptance criterion) assert a second process replays from the
+# persisted record with this still at zero.
+MEASURE_COUNT = 0
+
+# Global opt-in: when True, kernel call sites that pass no explicit block
+# (the model hot paths, e.g. mamba2's conv frontend) resolve as "auto".
+# Flipped by the train/serve drivers' --auto-tune flag.
+AUTO_ENABLED = False
+
+
+def enable_auto(on: bool = True) -> None:
+    global AUTO_ENABLED
+    AUTO_ENABLED = on
+
+
+@dataclasses.dataclass
+class TuningSession:
+    """One tuning context: a cache plus the measurement protocol knobs
+    (paper: 3 timed iterations after warm-up)."""
+
+    cache: TuningCache = dataclasses.field(default_factory=TuningCache)
+    top_k: int = 4
+    warmup: int = 1
+    iters: int = 3
+    # Source stamped on measured records. Degraded protocols (e.g. a
+    # --smoke benchmark's single-iteration timing) pass "smoke" so the
+    # record is treated as upgradeable, like "model", by full-protocol
+    # callers instead of replayed forever.
+    record_source: str = "measured"
+
+    def tune(
+        self,
+        key: TuningKey,
+        candidates: Sequence[Any],
+        measure: Callable[[Any], float] | None = None,
+        *,
+        force: bool = False,
+    ) -> TuningRecord:
+        """Resolve ``key``: cache-hit fast path, else rank/measure/record.
+
+        ``candidates`` are structurally ranked (best first) and must each
+        expose a ``.block`` attribute. ``measure(block) -> seconds`` may
+        raise to signal a discarded launch; ``None`` (e.g. under tracing)
+        selects the structural winner without hardware.
+        """
+        if not force:
+            hit = self.cache.get(key)
+            if hit is not None and not (
+                hit.source in ("model", "smoke") and measure is not None
+            ):
+                # Fast path — except an upgradeable record (cost model
+                # under jit tracing, or a degraded smoke-mode timing) is
+                # re-tuned as soon as a caller CAN measure.
+                return hit
+        if not candidates:
+            raise ValueError(f"no tuning candidates for {key.cache_id}")
+
+        record: TuningRecord | None = None
+        if measure is not None:
+            global MEASURE_COUNT
+            timings: dict[str, float] = {}
+            best: tuple[float, Any] | None = None
+            for cand in list(candidates)[: self.top_k]:
+                try:
+                    t = measure(cand.block)
+                except Exception:
+                    continue  # the paper's discarded launch (not counted)
+                MEASURE_COUNT += 1
+                timings[format_block(cand.block)] = t * 1e6
+                if best is None or t < best[0]:
+                    best = (t, cand)
+            if best is not None:
+                record = TuningRecord(
+                    block=best[1].block, timings_us=timings,
+                    source=self.record_source,
+                )
+        if record is None:  # no measure fn, or every candidate discarded
+            record = TuningRecord(
+                block=candidates[0].block, timings_us={}, source="model"
+            )
+        self.cache.put(key, record)
+        return record
+
+
+# One process-wide session so all `block="auto"` call sites share a
+# cache view. Rebuilt if REPRO_TUNE_CACHE is re-pointed (tests do this).
+_DEFAULT: TuningSession | None = None
+
+
+def default_session() -> TuningSession:
+    global _DEFAULT
+    from repro.tuning.cache import default_cache_dir
+
+    if _DEFAULT is None or _DEFAULT.cache.dir != default_cache_dir():
+        _DEFAULT = TuningSession()
+    return _DEFAULT
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+# ---------------------------------------------------------------------------
+# Fused 3-D stencil kernel glue (`block="auto"` in the fusion engine).
+# ---------------------------------------------------------------------------
+
+
+def fused3d_key(
+    domain: tuple[int, int, int],
+    radii: tuple[int, int, int],
+    n_f: int,
+    n_out: int,
+    dtype: str,
+    strategy: str,
+    backend: str | None = None,
+) -> TuningKey:
+    return TuningKey(
+        kernel="fused_stencil3d",
+        strategy=strategy,
+        domain=tuple(domain),
+        radii=tuple(radii),
+        n_f=n_f,
+        n_out=n_out,
+        dtype=str(dtype),
+        backend=backend if backend is not None else current_backend(),
+    )
+
+
+def fused3d_candidates(
+    domain: tuple[int, int, int],
+    radii: tuple[int, int, int],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+) -> list[Candidate]:
+    """Structurally-ranked block shapes for this domain, with graceful
+    degradation: if nothing fits the VMEM budget, re-enumerate without
+    the filter and keep only the smallest-footprint shape so ``auto``
+    still resolves (marked ``fallback`` by the caller)."""
+    tz_o, ty_o, tx_o = domain_axis_options(domain)
+    cands = enumerate_candidates(
+        domain, radii, n_f, n_out, itemsize,
+        vmem_budget=vmem_budget,
+        tx_options=tx_o, ty_options=ty_o, tz_options=tz_o,
+    )
+    if cands:
+        return cands
+    unfiltered = enumerate_candidates(
+        domain, radii, n_f, n_out, itemsize,
+        vmem_budget=2**63, tx_options=tx_o, ty_options=ty_o,
+        tz_options=tz_o,
+    )
+    if not unfiltered:
+        return []
+    smallest = min(unfiltered, key=lambda c: c.vmem_bytes)
+    return [smallest]
+
+
+def auto_block_3d(
+    f_padded,
+    ops,
+    phi,
+    n_out: int,
+    *,
+    aux=None,
+    strategy: str = "swc",
+    interpret: bool = False,
+    session: TuningSession | None = None,
+    vmem_budget: int = VMEM_BUDGET,
+) -> tuple[int, int, int]:
+    """Resolve ``block="auto"`` for the fused 3-D kernel.
+
+    Eager call sites get the full protocol (measure top-k on the actual
+    operand, persist); traced call sites get the cache or the structural
+    winner. Returns a concrete (τz, τy, τx)."""
+    sess = session if session is not None else default_session()
+    radii = ops.radius_per_axis()
+    n_f = f_padded.shape[0]
+    domain = tuple(
+        f_padded.shape[1 + a] - 2 * radii[a] for a in range(3)
+    )
+    itemsize = f_padded.dtype.itemsize
+    key = fused3d_key(
+        domain, radii, n_f, n_out, str(f_padded.dtype), strategy
+    )
+    cands = fused3d_candidates(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
+    )
+    if not cands:  # degenerate domain: let the wrapper clamp a default
+        return (8, 8, 128)
+    if cands[0].vmem_bytes > vmem_budget:
+        # Nothing fits VMEM: degrade to the smallest-footprint shape
+        # without measuring (a real launch could OOM), and persist it so
+        # the decision is visible in `repro.tuning show`.
+        rec = sess.cache.get(key)
+        if rec is None:
+            rec = TuningRecord(
+                block=cands[0].block, timings_us={}, source="fallback"
+            )
+            sess.cache.put(key, rec)
+        return tuple(rec.block)
+
+    measure = None
+    if _is_concrete(f_padded):
+        from repro.kernels.stencil3d import fused_stencil3d_pallas
+
+        def measure(blk):
+            def fn():
+                return fused_stencil3d_pallas(
+                    f_padded, ops, phi, n_out, aux=aux, block=blk,
+                    strategy=strategy, interpret=interpret,
+                )
+
+            return time_candidate(
+                fn, warmup=sess.warmup, iters=sess.iters
+            )
+
+    record = sess.tune(key, cands, measure)
+    return tuple(record.block)
+
+
+def lookup_fused3d(
+    f_interior,
+    ops,
+    n_out: int,
+    strategy: str,
+    session: TuningSession | None = None,
+) -> TuningRecord | None:
+    """Cached record for a fused 3-D stencil call on an UNPADDED field
+    stack (n_f, nz, ny, nx) — the read-only mirror of the key derivation
+    in ``auto_block_3d``, for benchmarks/examples that want to report
+    which block ``"auto"`` resolved to."""
+    sess = session if session is not None else default_session()
+    key = fused3d_key(
+        tuple(f_interior.shape[1:]),
+        ops.radius_per_axis(),
+        f_interior.shape[0],
+        n_out,
+        str(f_interior.dtype),
+        strategy,
+    )
+    return sess.cache.get(key)
+
+
+# ---------------------------------------------------------------------------
+# 1-D kernel glue (xcorr1d block_size="auto", conv1d block_seq="auto").
+# ---------------------------------------------------------------------------
+
+
+def auto_block_xcorr1d(
+    f_padded,
+    g,
+    *,
+    strategy: str,
+    unroll: int,
+    interpret: bool,
+    session: TuningSession | None = None,
+) -> int:
+    """Resolve ``block_size="auto"`` for the 1-D cross-correlation."""
+    sess = session if session is not None else default_session()
+    n_taps = g.shape[0]
+    halo = n_taps - 1
+    n = f_padded.shape[0] - halo
+    key = TuningKey(
+        kernel="xcorr1d",
+        strategy=f"{strategy}:u{unroll}",
+        domain=(n,),
+        radii=(halo,),
+        n_f=1,
+        n_out=1,
+        dtype=str(f_padded.dtype),
+        backend=current_backend(),
+    )
+    cands = enumerate_candidates_1d(
+        n, halo, itemsize=f_padded.dtype.itemsize
+    )
+    if not cands:
+        return 2048
+
+    measure = None
+    if _is_concrete(f_padded) and _is_concrete(g):
+
+        def measure(blk):
+            from repro.kernels import ops as kops
+
+            def fn():
+                return kops.xcorr1d(
+                    f_padded, g, strategy=strategy, block_size=int(blk),
+                    unroll=unroll, interpret=interpret,
+                )
+
+            return time_candidate(
+                fn, warmup=sess.warmup, iters=sess.iters
+            )
+
+    return int(sess.tune(key, cands, measure).block)
+
+
+def auto_block_conv1d(
+    x,
+    w,
+    *,
+    activation: str,
+    interpret: bool,
+    session: TuningSession | None = None,
+) -> int:
+    """Resolve ``block_seq="auto"`` for the depthwise causal conv."""
+    sess = session if session is not None else default_session()
+    b, s, c = x.shape
+    k = w.shape[0]
+    key = TuningKey(
+        kernel="conv1d_depthwise",
+        strategy=activation or "none",
+        domain=(b, s, c),
+        radii=(k - 1,),
+        n_f=1,
+        n_out=1,
+        dtype=str(x.dtype),
+        backend=current_backend(),
+    )
+    cands = enumerate_candidates_1d(
+        s, k - 1, width=c, itemsize=x.dtype.itemsize,
+        options=(128, 256, 512, 1024, 2048),
+    )
+    if not cands:
+        return 512
+
+    measure = None
+    if _is_concrete(x) and _is_concrete(w):
+
+        def measure(blk):
+            from repro.kernels import ops as kops
+
+            def fn():
+                return kops.conv1d_depthwise(
+                    x, w, activation=activation, block_seq=int(blk),
+                    interpret=interpret,
+                )
+
+            return time_candidate(
+                fn, warmup=sess.warmup, iters=sess.iters
+            )
+
+    return int(sess.tune(key, cands, measure).block)

@@ -1,0 +1,280 @@
+"""Tuning subsystem tests: cache round-trip persistence, key stability
+across processes, schema-bump invalidation, VMEM fallback, and the
+``block="auto"`` acceptance criterion — identical numerics to an
+explicit block, with a second process reusing the persisted record
+without re-measurement."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fusion import FusedStencilOp
+from repro.core.stencil import derivative_operator_set
+from repro.tuning import (
+    SCHEMA_VERSION,
+    TuningCache,
+    TuningKey,
+    TuningRecord,
+    TuningSession,
+    fused3d_candidates,
+)
+from repro.tuning.session import auto_block_3d
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+KEY = TuningKey(
+    kernel="fused_stencil3d", strategy="swc", domain=(8, 8, 16),
+    radii=(1, 1, 1), n_f=2, n_out=1, dtype="float32", backend="cpu",
+)
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    return tmp_path
+
+
+def _subprocess_env(cache_dir) -> dict:
+    env = dict(os.environ)
+    env["REPRO_TUNE_CACHE"] = str(cache_dir)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# --- cache ---------------------------------------------------------------------
+
+
+def test_cache_roundtrip_persistence(cache_dir):
+    rec = TuningRecord(
+        block=(4, 8, 16), timings_us={"4x8x16": 12.5, "8x8x16": 17.0},
+        source="measured",
+    )
+    TuningCache().put(KEY, rec)
+    # A fresh cache object re-reads from disk (new-process simulation).
+    got = TuningCache().get(KEY)
+    assert got is not None
+    assert got.block == (4, 8, 16)  # tuple restored from JSON list
+    assert got.timings_us == rec.timings_us
+    assert got.source == "measured"
+    assert got.schema == SCHEMA_VERSION
+    assert got.created > 0
+
+
+def test_cache_key_stable_across_processes(cache_dir):
+    code = (
+        "from repro.tuning import TuningKey\n"
+        "print(TuningKey(kernel='fused_stencil3d', strategy='swc',"
+        " domain=(8, 8, 16), radii=(1, 1, 1), n_f=2, n_out=1,"
+        " dtype='float32', backend='cpu').cache_id)\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=_subprocess_env(cache_dir), check=True,
+    )
+    assert out.stdout.strip() == KEY.cache_id
+
+
+def test_schema_bump_invalidates_records(cache_dir):
+    TuningCache().put(
+        KEY, TuningRecord(block=(4, 8, 16), timings_us={}, source="model")
+    )
+    path = cache_dir / "cache.json"
+    raw = json.loads(path.read_text())
+    for rec in raw["records"].values():
+        rec["schema"] = SCHEMA_VERSION - 1  # pretend an older build wrote it
+    path.write_text(json.dumps(raw))
+    assert TuningCache().get(KEY) is None
+
+
+def test_cache_put_merges_with_disk(cache_dir):
+    """Two cache objects (concurrent-process stand-ins) don't clobber
+    each other's records."""
+    a, b = TuningCache(), TuningCache()
+    key2 = TuningKey(
+        kernel="xcorr1d", strategy="baseline:u1", domain=(1024,),
+        radii=(2,), n_f=1, n_out=1, dtype="float32", backend="cpu",
+    )
+    a.put(KEY, TuningRecord(block=(8, 8, 16), timings_us={}, source="model"))
+    b.put(key2, TuningRecord(block=2048, timings_us={}, source="model"))
+    fresh = TuningCache()
+    assert fresh.get(KEY) is not None
+    assert fresh.get(key2) is not None
+    assert fresh.get(key2).block == 2048  # int block round-trips as int
+
+
+# --- session -------------------------------------------------------------------
+
+
+def test_session_cache_hit_skips_measurement(cache_dir):
+    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    calls = []
+
+    def measure(block):
+        calls.append(block)
+        return 1.0 if block != cands[0].block else 0.5
+
+    sess = TuningSession(top_k=2)
+    rec1 = sess.tune(KEY, cands, measure)
+    assert rec1.source == "measured" and len(calls) == 2
+    rec2 = sess.tune(KEY, cands, measure)
+    assert len(calls) == 2  # fast path: no new measurements
+    assert rec2.block == rec1.block
+
+
+def test_session_upgrades_model_record_when_measurable(cache_dir):
+    """A cost-model record (persisted under jit tracing) is re-tuned —
+    not returned from the fast path — once a caller can measure."""
+    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    sess = TuningSession(top_k=2)
+    traced = sess.tune(KEY, cands, measure=None)
+    assert traced.source == "model"
+
+    calls = []
+
+    def measure(block):
+        calls.append(block)
+        return 1.0
+
+    upgraded = sess.tune(KEY, cands, measure)
+    assert upgraded.source == "measured" and len(calls) == 2
+    # ...and the measured record now IS the fast path.
+    again = sess.tune(KEY, cands, measure)
+    assert len(calls) == 2 and again.source == "measured"
+
+
+def test_session_all_discarded_falls_back_to_model(cache_dir):
+    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+
+    def measure(block):
+        raise RuntimeError("launch failed")  # paper: discarded launches
+
+    rec = TuningSession().tune(KEY, cands, measure)
+    assert rec.source == "model"
+    assert rec.block == cands[0].block
+
+
+def _tiny_problem():
+    opset = derivative_operator_set(3, 2, spacing=0.3)
+
+    def phi(d):
+        lap = d["dxx"] + d["dyy"] + d["dzz"]
+        return jnp.stack([d["val"][0] + 0.1 * lap[0]])
+
+    rng = np.random.default_rng(7)
+    f = jnp.asarray(rng.standard_normal((2, 8, 8, 16)), jnp.float32)
+    return opset, phi, f
+
+
+def test_auto_block_vmem_fallback(cache_dir):
+    """No candidate fits a (tiny) VMEM budget: auto degrades to the
+    smallest-footprint block without measuring, and the kernel still
+    runs with it."""
+    from repro.kernels import ops as kops
+    from repro.tuning import session as sess_mod
+
+    opset, phi, f = _tiny_problem()
+    r = opset.radius
+    fp = jnp.pad(f, ((0, 0),) + ((r, r),) * 3, mode="wrap")
+    before = sess_mod.MEASURE_COUNT
+    block = auto_block_3d(fp, opset, phi, 1, strategy="swc",
+                          interpret=True, vmem_budget=64)
+    assert sess_mod.MEASURE_COUNT == before  # no launches attempted
+    rec = TuningCache().get(
+        TuningKey("fused_stencil3d", "swc", (8, 8, 16), (r,) * 3, 2, 1,
+                  "float32", sess_mod.current_backend())
+    )
+    assert rec is not None and rec.source == "fallback"
+    out = kops.fused_stencil3d(
+        fp, opset, phi, 1, strategy="swc", block=block, interpret=True
+    )
+    assert out.shape == (1, 8, 8, 16)
+
+
+# --- block="auto" end to end (acceptance criterion) ---------------------------
+
+
+def test_auto_matches_explicit_and_persists_across_processes(cache_dir):
+    opset, phi, f = _tiny_problem()
+    auto_op = FusedStencilOp(opset, phi, 1, strategy="swc", block="auto")
+    explicit = FusedStencilOp(opset, phi, 1, strategy="swc",
+                              block=(4, 4, 16))
+    out_auto = auto_op(f)
+    out_exp = explicit(f)
+    np.testing.assert_array_equal(
+        np.asarray(out_auto), np.asarray(out_exp)
+    )
+
+    records = TuningCache().items()
+    assert len(records) == 1
+    rec = next(iter(records.values()))
+    assert rec.source == "measured" and rec.timings_us
+
+    # Second process: same auto op must replay the persisted record with
+    # ZERO measurements, and produce the same numerics.
+    code = f"""
+import numpy as np
+import jax.numpy as jnp
+from repro.core.fusion import FusedStencilOp
+from repro.core.stencil import derivative_operator_set
+from repro.tuning import session as sess_mod
+
+opset = derivative_operator_set(3, 2, spacing=0.3)
+def phi(d):
+    lap = d["dxx"] + d["dyy"] + d["dzz"]
+    return jnp.stack([d["val"][0] + 0.1 * lap[0]])
+rng = np.random.default_rng(7)
+f = jnp.asarray(rng.standard_normal((2, 8, 8, 16)), jnp.float32)
+out = FusedStencilOp(opset, phi, 1, strategy="swc", block="auto")(f)
+assert sess_mod.MEASURE_COUNT == 0, sess_mod.MEASURE_COUNT
+expect = np.asarray(
+    FusedStencilOp(opset, phi, 1, strategy="swc", block=(4, 4, 16))(f)
+)
+np.testing.assert_array_equal(np.asarray(out), expect)
+print("REUSED_OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=_subprocess_env(cache_dir),
+    )
+    assert out.returncode == 0, out.stderr
+    assert "REUSED_OK" in out.stdout
+
+
+def test_xcorr1d_auto_matches_explicit(cache_dir):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(3)
+    f = jnp.asarray(rng.standard_normal(4096 + 4), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    out = kops.xcorr1d(f, g, strategy="baseline", block_size="auto",
+                       interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.xcorr1d(f, g)),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert any(
+        k.startswith("xcorr1d|") for k in TuningCache().items()
+    )
+
+
+def test_conv1d_auto_matches_explicit(cache_dir):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    out = kops.conv1d_depthwise(x, w, block_seq="auto", interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.conv1d_depthwise_causal(x, w)),
+        rtol=1e-5, atol=1e-5,
+    )
+    assert any(
+        k.startswith("conv1d_depthwise|") for k in TuningCache().items()
+    )
