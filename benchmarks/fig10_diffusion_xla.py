@@ -22,7 +22,7 @@ def _conv_nd(f, g, ndim):
     )
 
 
-def run(full: bool = False) -> None:
+def run(full: bool = False, dims: tuple[int, ...] = (1, 2, 3)) -> None:
     shapes = {
         1: (1 << (22 if full else 18),),
         2: ((2048, 2048) if full else (256, 256)),
@@ -30,6 +30,8 @@ def run(full: bool = False) -> None:
     }
     rng = np.random.default_rng(0)
     for ndim, shape in shapes.items():
+        if ndim not in dims:
+            continue
         for acc in ((2, 4, 8) if full else (2, 6)):
             r = acc // 2
             c2 = central_difference_coeffs(2, acc)

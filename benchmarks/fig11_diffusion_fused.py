@@ -1,43 +1,45 @@
 """Paper Figs. 11-12: diffusion equation with the fused stencil engine,
-1/2/3-D, radius (accuracy) sweep, HWC vs SWC strategies. The SWC block
-comes from the tuning subsystem (``block="auto"``): the eager warm call
-measures-and-records on a cache miss, the jitted timing loop replays the
-persisted winner."""
+1/2/3-D, radius (accuracy) sweep, HWC vs SWC strategies — the SWC path
+now runs at every rank through the StencilPlan lowering layer. The SWC
+block comes from the tuning subsystem (``block="auto"``): the eager warm
+call measures-and-records on a cache miss, the jitted timing loop
+replays the persisted winner."""
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from benchmarks.util import emit, time_fn
+from benchmarks.util import emit, smoke, time_fn
 from repro.core.rooflinelib import TPU_V5E
 from repro.physics.diffusion import DiffusionProblem
-from repro.tuning import format_block, lookup_fused3d
+from repro.tuning import format_block, lookup_fused_nd
 
 
-def run(full: bool = False) -> None:
+def run(full: bool = False, dims: tuple[int, ...] = (1, 2, 3)) -> None:
     shapes = {
-        1: (1 << (22 if full else 18),),
-        2: ((2048, 2048) if full else (256, 256)),
-        3: ((256,) * 3 if full else (32, 32, 64)),
+        1: (1 << (22 if full else 14 if smoke() else 18),),
+        2: ((2048, 2048) if full else (64, 64) if smoke() else (256, 256)),
+        3: ((256,) * 3 if full else (16,) * 3 if smoke() else (32, 32, 64)),
     }
     for ndim, shape in shapes.items():
+        if ndim not in dims:
+            continue
         for acc in ((2, 4, 6, 8) if full else (2, 6)):
             p = DiffusionProblem(shape, accuracy=acc)
             f0 = p.init_field()
             n = int(np.prod(shape))
             roof = 2 * n * 4 / TPU_V5E.hbm_bw
-            strategies = ["hwc"] + (["swc"] if ndim == 3 else [])
-            for strat in strategies:
+            for strat in ("hwc", "swc"):
                 tuned = ""
                 if strat == "swc":
                     op = p.step_op(strat, block="auto")
                     op(f0)  # eager: tune-and-persist on a cache miss
-                    rec = lookup_fused3d(f0, op.ops, 1, "swc")
+                    rec = lookup_fused_nd(f0, op.ops, 1, "swc")
                     if rec is not None:
                         tuned = (f";tuned_block={format_block(rec.block)}"
                                  f";tuned_src={rec.source}")
                 else:
-                    op = p.step_op(strat, block=(8, 8, 64))
+                    op = p.step_op(strat)
                 jitted = jax.jit(op)
                 t = time_fn(jitted, f0, iters=3)
                 emit(

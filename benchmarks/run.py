@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import subprocess
 
@@ -83,15 +84,31 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (device + git sha "
                          "stamped) for artifact archiving")
+    ap.add_argument("--dims", default=None, metavar="D[,D...]",
+                    help="restrict dimensionality-sweep modules (fig10/"
+                         "fig11) to these ranks, e.g. --dims 1,2 or "
+                         "--dims 3 (default: all of 1,2,3)")
     args = ap.parse_args()
     if args.smoke:
         util.set_smoke(True)
+    dims = None
+    if args.dims is not None:
+        try:
+            dims = tuple(sorted({int(d) for d in args.dims.split(",")}))
+        except ValueError:
+            dims = ()
+        if not dims or any(d not in (1, 2, 3) for d in dims):
+            ap.error("--dims entries must be in {1, 2, 3}")
     header()
     for name in MODULES:
         if args.only and args.only not in name:
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
-        mod.run(full=args.full)
+        kwargs = {}
+        if (dims is not None
+                and "dims" in inspect.signature(mod.run).parameters):
+            kwargs["dims"] = dims  # others run normally (no rank sweep)
+        mod.run(full=args.full, **kwargs)
     if args.json:
         write_json(args.json)
 

@@ -7,19 +7,30 @@ A fused stencil operation is the paper's chain φ(γ(ψ(f))) (Sec. 3.3):
      Q = A·B with A ∈ R^{n_s×n_k}, B ∈ R^{n_k×n_f} per point (Eq. 8),
   φ  nonlinear point-wise map producing the n_out field updates (Eq. 9).
 
-``strategy`` selects the caching regime evaluated by the paper:
+``strategy`` selects the caching regime evaluated by the paper. Every
+strategy lowers through the :class:`~repro.kernels.plan.StencilPlan`
+pipeline (planner → rank-generic emitter → tuning cache) except
+``hwc``, which is pure jnp:
 
-  * ``hwc``        — pure jnp; the compiler (XLA) owns on-chip residency
-                     (the hardware-managed-cache analogue);
-  * ``swc``        — Pallas kernel, VMEM residency owned by us, blocks
-                     auto-pipelined (paper Fig. 5a on TPU);
-  * ``swc_stream`` — Pallas kernel, explicit z-streaming with carried
-                     halo + prefetch DMA (paper Fig. 5b on TPU).
+  ============  =========  =====================================================
+  strategy      ranks      on-chip residency
+  ============  =========  =====================================================
+  ``hwc``        1, 2, 3   compiler-managed (XLA fuses the tap loops; the
+                           hardware-managed-cache analogue)
+  ``swc``        1, 2, 3   Pallas kernel, VMEM residency owned by us, blocks
+                           auto-pipelined (paper Fig. 5a on TPU)
+  ``swc_stream``       3   Pallas kernel, explicit z-streaming with carried
+                           halo + prefetch DMA (paper Fig. 5b on TPU); a
+                           rank-3 plan attribute
+  ============  =========  =====================================================
 
 The same object also runs *distributed* over a device mesh: the domain is
 decomposed over mesh axes and halos are exchanged with collective
 permutes before each application (`apply_sharded`), which is the
-shard_map analogue of Astaroth's MPI halo exchange.
+shard_map analogue of Astaroth's MPI halo exchange. With
+``overlap=True`` the interior (halo-independent) points are computed
+from purely local data so XLA can overlap the collective-permute with
+interior FLOPs (the compute/communication overlap decomposition).
 """
 from __future__ import annotations
 
@@ -30,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import boundary
-from repro.core.halo import exchange_halos_nd
+from repro.core.halo import exchange_halos_nd, interior_first
 from repro.core.stencil import OperatorSet
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -49,19 +60,26 @@ class FusedStencilOp:
     n_out: int
     boundary_mode: str = "periodic"
     strategy: str = "hwc"
-    # (τz, τy, τx), or "auto" to consult the persistent tuning cache
-    # (repro.tuning): cache-hit fast path, rank-and-measure on an eager
-    # miss, structural cost-model winner under jit tracing.
-    block: tuple[int, int, int] | str = (8, 8, 128)
+    # Rank-length tile (x last), "auto" to consult the persistent tuning
+    # cache (repro.tuning: cache-hit fast path, rank-and-measure on an
+    # eager miss, structural cost-model winner under jit tracing), or
+    # None for the per-rank default.
+    block: tuple[int, ...] | str | None = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(
                 f"strategy {self.strategy!r} not in {STRATEGIES}"
             )
+        if self.strategy == "swc_stream" and self.ops.ndim != 3:
+            raise ValueError(
+                "swc_stream (explicit z-streaming) requires a 3-D "
+                f"operator set; got ndim={self.ops.ndim} — use "
+                "strategy='swc'"
+            )
         if isinstance(self.block, str) and self.block != "auto":
             raise ValueError(
-                f"block must be a (τz, τy, τx) tuple or 'auto', "
+                f"block must be a rank-length tuple, 'auto', or None, "
                 f"got {self.block!r}"
             )
 
@@ -78,14 +96,13 @@ class FusedStencilOp:
 
         ``aux`` (n_aux, *interior): extra point-wise inputs forwarded to
         φ (fused axpy / RK carries — beyond-paper extension)."""
-        ndim = self.ops.ndim
-        if ndim == 3 and self.strategy in ("swc", "swc_stream"):
-            return kops.fused_stencil3d(
+        if self.strategy in ("swc", "swc_stream"):
+            return kops.fused_stencil_nd(
                 f_padded, self.ops, self.phi, self.n_out, aux=aux,
                 strategy=self.strategy, block=self.block,
             )
-        # hwc path — and the general-rank fallback for 1-D/2-D domains,
-        # where XLA's fusion already achieves the paper's HWC behaviour.
+        # hwc — XLA owns on-chip residency (the paper's compiler-managed
+        # caching regime).
         return kref.fused_stencil(f_padded, self.ops, self.phi, aux=aux)
 
     def __call__(
@@ -106,25 +123,123 @@ class FusedStencilOp:
         f_local: jnp.ndarray,
         mesh_axes: Sequence[str | None],
         aux: jnp.ndarray | None = None,
+        *,
+        overlap: bool = False,
     ) -> jnp.ndarray:
         """Apply inside ``shard_map``: exchange halos over the mesh axes
         assigned to each spatial dimension, then run the local fused
         kernel. ``mesh_axes[a]`` names the mesh axis sharding spatial axis
-        ``a`` (None = unsharded → local boundary padding).
+        ``a`` (None = unsharded → local boundary padding); it must have
+        exactly one entry per spatial dimension.
 
         Periodic boundaries compose exactly with the ring permute: the
         wrap-around neighbor IS the periodic image.
+
+        ``overlap=True`` emits the halo exchange first and computes the
+        halo-independent interior from purely local data, so XLA's
+        latency-hiding scheduler can overlap the collective-permute with
+        interior FLOPs; the dependent edge slabs are computed from the
+        exchanged array afterwards. Numerics are unchanged.
         """
+        n_spatial = f_local.ndim - 1
+        if len(mesh_axes) != n_spatial:
+            raise ValueError(
+                f"mesh_axes has {len(mesh_axes)} entries but the field "
+                f"stack has {n_spatial} spatial dims — pass one mesh-axis "
+                "name (or None) per spatial dimension"
+            )
         if self.boundary_mode != "periodic":
             raise NotImplementedError(
                 "sharded stencils currently support periodic boundaries "
                 "(the paper's simulation setup)"
             )
+        if overlap:
+            out = self._apply_sharded_overlap(f_local, mesh_axes, aux)
+            if out is not None:
+                return out
         fp = exchange_halos_nd(
             f_local, self.radius_per_axis, mesh_axes,
             spatial_axes=tuple(range(1, f_local.ndim)),
         )
         return self.apply_padded(fp, aux=aux)
+
+    def _apply_sharded_overlap(
+        self,
+        f_local: jnp.ndarray,
+        mesh_axes: Sequence[str | None],
+        aux: jnp.ndarray | None,
+    ) -> jnp.ndarray | None:
+        """Compute/communication overlap decomposition (module docstring).
+
+        Returns None when the decomposition doesn't apply (no sharded
+        axis, or a local extent too small to hold an interior) — the
+        caller falls back to the plain exchange-then-apply path.
+        """
+        rads = self.radius_per_axis
+        spatial_axes = tuple(range(1, f_local.ndim))
+        sharded = [
+            (ax, r)
+            for ax, r, name in zip(spatial_axes, rads, mesh_axes)
+            if name is not None and r > 0
+        ]
+        if not sharded:
+            return None  # nothing to overlap with
+        if any(f_local.shape[ax] <= 2 * r for ax, r in sharded):
+            return None  # no interior: every point depends on halos
+
+        # Emit the exchange FIRST: the permutes depend only on edge
+        # planes, the interior compute below only on local data, so the
+        # scheduler can run them concurrently.
+        fp = exchange_halos_nd(
+            f_local, rads, mesh_axes, spatial_axes=spatial_axes,
+        )
+
+        # Interior: along each sharded axis the local block IS the
+        # interior plus its (not-yet-arrived) halo, so it only needs
+        # local periodic padding on the unsharded axes.
+        pad_width = [(0, 0)] * f_local.ndim
+        for ax, r, name in zip(spatial_axes, rads, mesh_axes):
+            if name is None and r > 0:
+                pad_width[ax] = (r, r)
+        f_interior_padded = jnp.pad(f_local, pad_width, mode="wrap")
+        interior_view, edges = interior_first(
+            f_local, [r for _, r in sharded], [ax for ax, _ in sharded]
+        )
+        int_sl = [slice(None)] * f_local.ndim
+        for ax, r in sharded:
+            int_sl[ax] = slice(r, f_local.shape[ax] - r)
+        aux_int = aux[tuple(int_sl)] if aux is not None else None
+        out_interior = self.apply_padded(f_interior_padded, aux=aux_int)
+        assert out_interior.shape[1:] == interior_view.shape[1:]
+
+        out = jnp.zeros(
+            (self.n_out,) + f_local.shape[1:], out_interior.dtype
+        )
+        out = out.at[tuple(int_sl)].set(out_interior)
+
+        # Edge slabs depend on the exchanged halos: recompute each slab
+        # from the padded array. Slabs span the full extent of the other
+        # axes, so corner regions are (idempotently) covered.
+        for ax, sl in edges:
+            n_ax = f_local.shape[ax]
+            s = sl.start or 0
+            e = n_ax if sl.stop is None else sl.stop
+            r_ax = rads[ax - 1]
+            w_sl = [slice(None)] * fp.ndim
+            w_sl[ax] = slice(s, e + 2 * r_ax)
+            slab_out = self.apply_padded(
+                fp[tuple(w_sl)],
+                aux=None if aux is None else aux[
+                    tuple(
+                        slice(s, e) if a == ax else slice(None)
+                        for a in range(aux.ndim)
+                    )
+                ],
+            )
+            o_sl = [slice(None)] * out.ndim
+            o_sl[ax] = slice(s, e)
+            out = out.at[tuple(o_sl)].set(slab_out)
+        return out
 
 
 def integrate(

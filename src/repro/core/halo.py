@@ -75,7 +75,11 @@ def exchange_halos_nd(
     standard dimension-by-dimension halo factorization.
     """
     if not (len(radii) == len(mesh_axes) == len(spatial_axes)):
-        raise ValueError("radii/mesh_axes/spatial_axes must align")
+        raise ValueError(
+            f"radii ({len(radii)}), mesh_axes ({len(mesh_axes)}) and "
+            f"spatial_axes ({len(spatial_axes)}) must have one entry per "
+            "spatial dimension"
+        )
     out = f
     for r, name, ax in zip(radii, mesh_axes, spatial_axes):
         if r == 0:

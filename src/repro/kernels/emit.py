@@ -1,0 +1,308 @@
+"""Rank-generic Pallas emitters for :class:`~repro.kernels.plan.StencilPlan`.
+
+This module subsumes the previously hand-written 1-D/3-D kernel bodies:
+one pipelined software-managed-cache emitter serves ranks 1, 2 and 3,
+and the explicit z-streaming variant (paper Fig. 5b) is selected by a
+rank-3 plan attribute (``strategy="swc_stream"``) rather than living in
+a separate code path.
+
+Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
+
+* ``swc`` — the input tile plus halo, (τ…+2r…, τx+2rx) per field, is
+  staged into VMEM by the Pallas pipeline with the slowest spatial axis
+  iterating innermost at rank 3 (z-streaming with automatic
+  double-buffered prefetch). Tap evaluation is fully unrolled with
+  static offsets (stencil point-wise unrolling) and runs on the VPU as
+  shifted-slice FMAs. ``plan.unroll > 1`` additionally computes several
+  adjacent x sub-tiles per grid step from one staged window — the
+  paper's element-wise unrolling, generalized to any rank.
+* ``swc_stream`` — rank 3 only: the (y, x) tile is fixed per grid step
+  and the kernel streams z-chunks through an explicitly managed VMEM
+  working buffer with async-DMA prefetch and carried halo planes (see
+  DESIGN.md §2 for the TPU adaptation of the circular-buffer trick).
+
+The HWC ("let the compiler manage residency") strategy lives in
+``repro.kernels.ref`` as pure jnp.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stencil import OperatorSet
+from repro.kernels.compat import element_window_spec
+from repro.kernels.plan import StencilPlan
+
+
+def _block_derivs(
+    fblk: jnp.ndarray,
+    ops: OperatorSet,
+    radii: tuple[int, ...],
+    tile: tuple[int, ...],
+) -> dict[str, jnp.ndarray]:
+    """Evaluate every operator over a VMEM-resident block of any rank.
+
+    ``fblk``: (n_f, *(τ_a + 2r_a)). Static slices per tap — unrolled at
+    trace time (stencil point-wise unrolling)."""
+    rank = len(tile)
+    out: dict[str, jnp.ndarray] = {}
+    for spec in ops.ops:
+        acc = None
+        for off, c in zip(spec.offsets, spec.coeffs):
+            sl = (slice(None),) + tuple(
+                slice(radii[a] + off[a], radii[a] + off[a] + tile[a])
+                for a in range(rank)
+            )
+            term = jnp.asarray(c, dtype=fblk.dtype) * fblk[sl]
+            acc = term if acc is None else acc + term
+        out[spec.name] = acc
+    return out
+
+
+def _kernel_pipelined(
+    f_ref, *rest, ops, radii, tile, phi, unroll, has_aux
+):
+    """Pipelined kernel, any rank. ``rest`` is (aux_ref, o_ref) when the
+    plan carries aux inputs, else (o_ref,)."""
+    aux_ref, o_ref = rest if has_aux else (None, rest[0])
+    fblk = f_ref[...]
+    tx = tile[-1]
+    rx = radii[-1]
+    for e in range(unroll):  # static: unrolled at trace time
+        sub = fblk if unroll == 1 else fblk[..., e * tx : e * tx + tx + 2 * rx]
+        derivs = _block_derivs(sub, ops, radii, tile)
+        if has_aux:
+            ablk = aux_ref[...]
+            a_sub = ablk if unroll == 1 else ablk[..., e * tx : (e + 1) * tx]
+            val = phi(derivs, a_sub)
+        else:
+            val = phi(derivs)
+        if unroll == 1:
+            o_ref[...] = val
+        else:
+            o_ref[..., e * tx : (e + 1) * tx] = val
+
+
+def _grid_and_maps(plan: StencilPlan):
+    """Grid extents and (input, tile-indexed) index maps per rank.
+
+    The input map returns *element* offsets on the window (spatial)
+    dims; the tile map returns block indices for halo-free operands
+    (aux, output). At rank 3 the grid iterates (y, x, z) with z
+    innermost so the pipeline's next-block prefetch walks the z-stream.
+    """
+    steps = plan.block[:-1] + (plan.x_step,)
+    grid_n = plan.grid
+    if plan.rank == 1:
+        (sx,) = steps
+        return (
+            grid_n,
+            lambda i: (0, i * sx),
+            lambda i: (0, i),
+        )
+    if plan.rank == 2:
+        sy, sx = steps
+        return (
+            grid_n,
+            lambda i, j: (0, i * sy, j * sx),
+            lambda i, j: (0, i, j),
+        )
+    sz, sy, sx = steps
+    return (
+        (grid_n[1], grid_n[2], grid_n[0]),
+        lambda j, k, i: (0, i * sz, j * sy, k * sx),
+        lambda j, k, i: (0, i, j, k),
+    )
+
+
+def fused_stencil_pallas(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi: Callable[..., jnp.ndarray],
+    plan: StencilPlan,
+    *,
+    aux: jnp.ndarray | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Emit and invoke the fused φ(A·B) kernel described by ``plan``.
+
+    ``f_padded``: (n_f, *(n_a + 2r_a)) with radii from the plan. ``aux``
+    (n_aux, *interior): extra point-wise inputs staged as halo-free
+    center tiles and passed as phi's second argument — fuses point-wise
+    follow-up work (e.g. the RK axpy) into the stencil kernel.
+    Returns (n_out, *interior).
+    """
+    if (aux is not None) != bool(plan.n_aux):
+        raise ValueError("aux operand does not match plan.n_aux")
+    if plan.strategy == "swc_stream":
+        return _fused_stream(
+            f_padded, ops, phi, plan, interpret=interpret
+        )
+
+    radii, tile = plan.radii, plan.block
+    window = tuple(
+        (plan.x_step if a == plan.rank - 1 else tile[a]) + 2 * radii[a]
+        for a in range(plan.rank)
+    )
+    out_tile = plan.block[:-1] + (plan.x_step,)
+    grid, in_map, tile_map = _grid_and_maps(plan)
+    in_specs = [
+        element_window_spec(
+            (plan.n_f,) + window,
+            in_map,
+            window_dims=tuple(range(1, plan.rank + 1)),
+        )
+    ]
+    operands = [f_padded]
+    if aux is not None:
+        in_specs.append(pl.BlockSpec((plan.n_aux,) + out_tile, tile_map))
+        operands.append(aux)
+    kernel = functools.partial(
+        _kernel_pipelined, ops=ops, radii=radii, tile=tile, phi=phi,
+        unroll=plan.unroll, has_aux=aux is not None,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((plan.n_out,) + out_tile, tile_map),
+        out_shape=jax.ShapeDtypeStruct(
+            (plan.n_out,) + plan.interior, f_padded.dtype
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5b: explicit z-streaming with carried halo planes + prefetch DMA
+# (rank-3 plans only; selected by plan.strategy == "swc_stream").
+# ---------------------------------------------------------------------------
+
+
+def _kernel_stream(
+    f_hbm, o_hbm, work, pf0, pf1, outbuf, sem_pf, sem_out, *,
+    ops, rad, tile, phi, n_chunks,
+):
+    """Grid step = one (y, x) tile; the kernel streams all z-chunks.
+
+    VMEM scratch:
+      ``work``  (n_f, τz+2rz, τy+2ry, τx+2rx) — the working set;
+      ``pf0/1`` (n_f, τz,     τy+2ry, τx+2rx) — double-buffered prefetch
+                 of the τz fresh planes for the next chunk;
+      ``outbuf``(n_out, τz, τy, τx)           — staging for output DMA.
+    """
+    j = pl.program_id(0)
+    k = pl.program_id(1)
+    rz, ry, rx = rad
+    tz, ty, tx = tile
+    y0 = j * ty
+    x0 = k * tx
+
+    def fresh_copy(chunk, pf_ref, slot):
+        """DMA the τz fresh planes of ``chunk`` into a prefetch buffer."""
+        return pltpu.make_async_copy(
+            f_hbm.at[
+                :,
+                pl.ds(chunk * tz + 2 * rz, tz),
+                pl.ds(y0, ty + 2 * ry),
+                pl.ds(x0, tx + 2 * rx),
+            ],
+            pf_ref,
+            sem_pf.at[slot],
+        )
+
+    # Prologue: leading halo planes go straight into the working buffer;
+    # chunk 0's fresh planes start streaming into prefetch slot 0.
+    halo_cp = pltpu.make_async_copy(
+        f_hbm.at[:, pl.ds(0, 2 * rz), pl.ds(y0, ty + 2 * ry),
+                 pl.ds(x0, tx + 2 * rx)],
+        work.at[:, pl.ds(0, 2 * rz)],
+        sem_out,  # reuse; waited below before any compute
+    )
+    halo_cp.start()
+    fresh_copy(0, pf0, 0).start()
+    halo_cp.wait()
+
+    def body(chunk, _):
+        slot = jax.lax.rem(chunk, 2)
+
+        # Kick off the NEXT chunk's fresh-plane DMA before computing this
+        # one (the paper's "prefetch buffer updated in parallel with
+        # computations").
+        @pl.when(chunk + 1 < n_chunks)
+        def _():
+            @pl.when(slot == 0)
+            def _():
+                fresh_copy(chunk + 1, pf1, 1).start()
+
+            @pl.when(slot == 1)
+            def _():
+                fresh_copy(chunk + 1, pf0, 0).start()
+
+        # Land this chunk's fresh planes behind the carried halo.
+        @pl.when(slot == 0)
+        def _():
+            fresh_copy(chunk, pf0, 0).wait()
+            work[:, pl.ds(2 * rz, tz)] = pf0[...]
+
+        @pl.when(slot == 1)
+        def _():
+            fresh_copy(chunk, pf1, 1).wait()
+            work[:, pl.ds(2 * rz, tz)] = pf1[...]
+
+        fblk = work[...]
+        derivs = _block_derivs(fblk, ops, (rz, ry, rx), (tz, ty, tx))
+        outbuf[...] = phi(derivs)
+        out_cp = pltpu.make_async_copy(
+            outbuf,
+            o_hbm.at[:, pl.ds(chunk * tz, tz), pl.ds(y0, ty), pl.ds(x0, tx)],
+            sem_out,
+        )
+        out_cp.start()
+
+        # Carry the trailing halo: last 2rz planes become the next chunk's
+        # leading halo (VMEM-to-VMEM plane copy; see module docstring on
+        # why TPU prefers this over the circular buffer).
+        work[:, pl.ds(0, 2 * rz)] = work[:, pl.ds(tz, 2 * rz)]
+        out_cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+def _fused_stream(
+    f_padded, ops, phi, plan: StencilPlan, *, interpret: bool = False
+):
+    rz, ry, rx = plan.radii
+    tz, ty, tx = plan.block
+    nz, ny, nx = plan.interior
+    n_chunks = nz // tz
+    dtype = f_padded.dtype
+
+    kernel = functools.partial(
+        _kernel_stream, ops=ops, rad=plan.radii, tile=plan.block,
+        phi=phi, n_chunks=n_chunks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(ny // ty, nx // tx),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((plan.n_out, nz, ny, nx), dtype),
+        scratch_shapes=[
+            pltpu.VMEM(
+                (plan.n_f, tz + 2 * rz, ty + 2 * ry, tx + 2 * rx), dtype
+            ),
+            pltpu.VMEM((plan.n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
+            pltpu.VMEM((plan.n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
+            pltpu.VMEM((plan.n_out, tz, ty, tx), dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(f_padded)

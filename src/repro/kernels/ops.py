@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from repro.core.stencil import OperatorSet
 from repro.kernels import ref as _ref
 from repro.kernels.conv1d_depthwise import conv1d_depthwise_pallas
+from repro.kernels.emit import fused_stencil_pallas
+from repro.kernels.plan import plan_stencil
 from repro.kernels.stencil1d import xcorr1d_pallas
-from repro.kernels.stencil3d import fused_stencil3d_pallas
 
 
 def _default_interpret() -> bool:
@@ -101,6 +102,51 @@ def _xcorr1d_jit(
     return out[:n]
 
 
+def fused_stencil_nd(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi: Callable[..., jnp.ndarray],
+    n_out: int,
+    *,
+    aux: jnp.ndarray | None = None,
+    strategy: str = "swc",
+    block: tuple[int, ...] | str | None = None,
+    unroll: int = 1,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused φ(A·B) over a padded (n_f, *spatial) domain of rank 1-3
+    (paper Eq. 9) — the thin dispatch over :class:`StencilPlan`.
+
+    ``strategy``: 'hwc' (XLA-managed), 'swc' (Pallas pipelined blocks,
+    any rank) or 'swc_stream' (Pallas explicit z-streaming, paper
+    Fig. 5b, rank 3 only). ``block`` is a rank-length tile (``None`` →
+    per-rank default; longer tuples keep their trailing, x-last entries;
+    non-divisible extents shrink the tile to the largest divisor) or
+    ``"auto"``, which consults the persistent tuning cache (measuring on
+    a miss when eager) — for every rank, through the same cache.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if strategy == "hwc":
+        return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
+    if block == "auto":
+        from repro.tuning.session import auto_block_nd
+
+        block = auto_block_nd(
+            f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
+            unroll=unroll, interpret=interpret,
+        )
+    plan = plan_stencil(
+        ops, f_padded.shape, n_out, strategy=strategy, block=block,
+        dtype=str(f_padded.dtype),
+        n_aux=aux.shape[0] if aux is not None else 0,
+        unroll=unroll,
+    )
+    return fused_stencil_pallas(
+        f_padded, ops, phi, plan, aux=aux, interpret=interpret
+    )
+
+
 def fused_stencil3d(
     f_padded: jnp.ndarray,
     ops: OperatorSet,
@@ -112,44 +158,11 @@ def fused_stencil3d(
     block: tuple[int, int, int] | str = (8, 8, 128),
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Fused φ(A·B) over a padded (n_f, z, y, x) domain (paper Eq. 9).
-
-    ``strategy``: 'hwc' (XLA-managed), 'swc' (Pallas pipelined blocks) or
-    'swc_stream' (Pallas explicit z-streaming, paper Fig. 5b). Interior
-    extents that don't divide the block are handled by shrinking the
-    block to the largest divisor (physics domains are powers of two, so
-    in practice blocks are used as-given). ``block="auto"`` consults the
-    persistent tuning cache (measuring on a miss when eager).
-    """
-    if interpret is None:
-        interpret = _default_interpret()
-    if strategy == "hwc":
-        return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
-    if block == "auto":
-        from repro.tuning.session import auto_block_3d
-
-        block = auto_block_3d(
-            f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
-            interpret=interpret,
-        )
-    rads = ops.radius_per_axis()
-    interior = tuple(
-        f_padded.shape[1 + a] - 2 * rads[a] for a in range(3)
+    """Historical rank-3 entry point — alias of :func:`fused_stencil_nd`."""
+    return fused_stencil_nd(
+        f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
+        block=block, interpret=interpret,
     )
-    block = tuple(
-        _largest_divisor_leq(interior[a], block[a]) for a in range(3)
-    )
-    return fused_stencil3d_pallas(
-        f_padded, ops, phi, n_out, aux=aux, block=block, strategy=strategy,
-        interpret=interpret,
-    )
-
-
-def _largest_divisor_leq(n: int, cap: int) -> int:
-    for t in range(min(cap, n), 0, -1):
-        if n % t == 0:
-            return t
-    return 1
 
 
 def conv1d_depthwise(

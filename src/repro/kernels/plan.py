@@ -1,0 +1,224 @@
+"""StencilPlan — the explicit lowering contract between the fusion
+engine, the rank-generic Pallas emitters, and the tuning subsystem.
+
+A plan captures everything the emitter needs to lower one fused
+φ(A·B) application — rank, caching strategy, block (tile) shape,
+element-wise unroll factor, halo radii, field/output/aux counts and
+dtype — and everything the tuning cache needs to key a record. The
+pipeline is
+
+    plan_stencil(...)  →  StencilPlan  →  emit.fused_stencil_pallas
+         (planner)        (lowering IR)         (emitter)
+
+with ``repro.tuning`` keying its persistent cache on the plan's
+serialized identity (``StencilPlan.tuning_key()``), so ``block="auto"``
+resolves through one cache for 1-D, 2-D and 3-D domains alike.
+
+Array-axis convention (matches ``repro.core.stencil``): spatial axes
+are ordered slowest→fastest, x always last (the TPU lane dimension);
+blocks follow the same order, e.g. (τz, τy, τx) at rank 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.stencil import OperatorSet
+
+STRATEGIES = ("swc", "swc_stream")
+
+# Per-rank default tiles: x spans the lane dimension (long 1-D blocks
+# amortize per-grid-step pipeline overhead), y/z follow the paper's
+# TPU-friendly bases.
+DEFAULT_BLOCKS: dict[int, tuple[int, ...]] = {
+    1: (2048,),
+    2: (16, 128),
+    3: (8, 8, 128),
+}
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``cap`` (≥ 1)."""
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilPlan:
+    """One lowered fused-stencil configuration (see module docstring).
+
+    ``block`` is the per-grid-step tile; at rank 1 the emitter computes
+    ``unroll`` adjacent x sub-tiles per grid step from one staged input
+    window (the paper's element-wise unrolling, generalized), so the
+    effective x extent per step is ``block[-1] * unroll``.
+    """
+
+    rank: int
+    strategy: str  # "swc" | "swc_stream"
+    block: tuple[int, ...]  # rank-length tile, x last
+    radii: tuple[int, ...]  # halo width per axis
+    interior: tuple[int, ...]  # unpadded spatial extents
+    n_f: int
+    n_out: int
+    dtype: str
+    n_aux: int = 0
+    unroll: int = 1  # element-wise unroll along x
+
+    def __post_init__(self):
+        if self.rank not in (1, 2, 3):
+            raise ValueError(f"rank must be 1, 2 or 3, got {self.rank}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"strategy {self.strategy!r} not in {STRATEGIES}"
+            )
+        if self.strategy == "swc_stream" and self.rank != 3:
+            raise ValueError(
+                "swc_stream (explicit z-streaming, paper Fig. 5b) is a "
+                f"rank-3 plan attribute; got rank {self.rank} — use "
+                "strategy='swc'"
+            )
+        if self.strategy == "swc_stream" and self.n_aux:
+            raise ValueError("aux inputs: use strategy='swc'")
+        for name, t in (
+            ("block", self.block),
+            ("radii", self.radii),
+            ("interior", self.interior),
+        ):
+            if len(t) != self.rank:
+                raise ValueError(
+                    f"{name} {t} must have rank {self.rank} entries"
+                )
+        if self.unroll < 1:
+            raise ValueError(f"unroll must be >= 1, got {self.unroll}")
+        if self.strategy == "swc_stream" and self.unroll != 1:
+            raise ValueError("swc_stream does not support unroll > 1")
+        step = self.x_step
+        for a in range(self.rank):
+            t = self.block[a] if a < self.rank - 1 else step
+            if self.interior[a] % t:
+                raise ValueError(
+                    f"axis {a} extent {self.interior[a]} not divisible "
+                    f"by tile {t}"
+                )
+
+    @property
+    def x_step(self) -> int:
+        """Output extent covered along x per grid step."""
+        return self.block[-1] * self.unroll
+
+    @property
+    def grid(self) -> tuple[int, ...]:
+        """Grid extents in axis order (the emitter may reorder for
+        streaming; at rank 3 the z axis iterates innermost)."""
+        steps = self.block[:-1] + (self.x_step,)
+        return tuple(n // t for n, t in zip(self.interior, steps))
+
+    # -- serialization (the tuning layer keys on this) ----------------------
+
+    @property
+    def kernel_name(self) -> str:
+        return f"fused_stencil{self.rank}d"
+
+    @property
+    def strategy_id(self) -> str:
+        """Strategy component of the cache key; the unroll factor is
+        part of the codegen configuration, so it joins the key."""
+        if self.unroll == 1:
+            return self.strategy
+        return f"{self.strategy}:u{self.unroll}"
+
+    def tuning_key(self, backend: str | None = None):
+        """The persistent-cache key for this plan's problem identity
+        (block excluded — the block IS the tuned value)."""
+        from repro.tuning.cache import TuningKey, current_backend
+
+        return TuningKey(
+            kernel=self.kernel_name,
+            strategy=self.strategy_id,
+            domain=self.interior,
+            radii=self.radii,
+            n_f=self.n_f,
+            n_out=self.n_out,
+            dtype=self.dtype,
+            backend=backend if backend is not None else current_backend(),
+        )
+
+
+def plan_stencil(
+    ops: OperatorSet,
+    padded_shape: Sequence[int],
+    n_out: int,
+    *,
+    strategy: str = "swc",
+    block: Sequence[int] | int | None = None,
+    dtype: str = "float32",
+    n_aux: int = 0,
+    unroll: int = 1,
+) -> StencilPlan:
+    """Lower a fused-stencil problem to a :class:`StencilPlan`.
+
+    ``padded_shape`` is the (n_f, *spatial_padded) operand shape (spatial
+    axes padded by ``ops.radius_per_axis()``). ``block`` may be ``None``
+    (per-rank default), an int (rank-1 shorthand), or a tuple; a tuple
+    longer than the rank keeps its trailing entries (x-last convention,
+    so a 3-D default like (8, 8, 128) lowers to (8, 128) at rank 2), and
+    each axis is clamped to the largest divisor of the interior extent —
+    non-block-divisible domains shrink the tile instead of failing.
+    """
+    rank = ops.ndim
+    radii = ops.radius_per_axis()
+    if len(padded_shape) != rank + 1:
+        raise ValueError(
+            f"padded operand must be (n_f, *spatial) with {rank} spatial "
+            f"dims, got shape {tuple(padded_shape)}"
+        )
+    interior = tuple(
+        padded_shape[1 + a] - 2 * radii[a] for a in range(rank)
+    )
+    if any(n <= 0 for n in interior):
+        raise ValueError(
+            f"padded shape {tuple(padded_shape)} leaves no interior for "
+            f"radii {radii}"
+        )
+
+    if block is None:
+        block = DEFAULT_BLOCKS[rank]
+    if isinstance(block, int):
+        block = (block,)
+    block = tuple(int(b) for b in block)
+    if len(block) > rank:
+        block = block[-rank:]
+    if len(block) != rank:
+        raise ValueError(
+            f"block {block} must have {rank} entries (or more, trailing "
+            "kept; x last)"
+        )
+
+    # Clamp to divisors. The x axis accounts for the unroll factor: the
+    # per-step extent block[-1] * unroll must divide the interior; if no
+    # unrolled tiling fits, unroll degrades to 1.
+    clamped = [
+        largest_divisor_leq(interior[a], block[a]) for a in range(rank - 1)
+    ]
+    nx = interior[-1]
+    if unroll > 1 and nx % unroll == 0:
+        tx = largest_divisor_leq(nx // unroll, block[-1])
+    else:
+        unroll = 1
+        tx = largest_divisor_leq(nx, block[-1])
+    clamped.append(tx)
+
+    return StencilPlan(
+        rank=rank,
+        strategy=strategy,
+        block=tuple(clamped),
+        radii=radii,
+        interior=interior,
+        n_f=int(padded_shape[0]),
+        n_out=int(n_out),
+        dtype=str(dtype),
+        n_aux=int(n_aux),
+        unroll=int(unroll),
+    )

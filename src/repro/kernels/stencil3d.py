@@ -1,88 +1,20 @@
-"""Fused 3-D multiphysics stencil kernel — the paper's core contribution
-(Sec. 4.4, Figs. 4-5) on the TPU target.
+"""Back-compat entry point for the fused 3-D kernel.
 
-One kernel invocation evaluates, for every grid point of its block,
-
-    Q = A · B        (all n_s linear stencil operators × all n_f fields)
-    out = φ(Q)       (all n_out nonlinear field updates)
-
-so intermediate derivatives never round-trip through HBM — the paper's
-operator-fusion strategy for cache-heavy nonlinear stencils.
-
-Two software-managed-cache strategies are provided (DESIGN.md §2):
-
-* ``swc``        — Fig. 5a adapted: the input block (τz+2r, τy+2r, τx+2r)
-  per field is staged into VMEM by the Pallas pipeline with the z grid
-  axis innermost, so consecutive steps walk z with automatic
-  double-buffered prefetch. Tap evaluation is fully unrolled with static
-  offsets (the point-wise-unroll codegen mode) and runs on the VPU as
-  shifted-slice FMAs — the TPU-native form of the paper's per-thread MAC.
-* ``swc_stream`` — Fig. 5b faithfully: the (y, x) tile is fixed per grid
-  step and the kernel *streams* z-chunks through an explicitly managed
-  VMEM working buffer, with a prefetch buffer updated by async DMA in
-  parallel with compute, and the trailing 2r halo planes carried over
-  between chunks. On TPU the paper's circular-buffer trick (avoiding the
-  data shuffle) would force dynamic modular slicing, defeating static tap
-  unrolling, so we carry the halo with a cheap VMEM-to-VMEM plane copy
-  instead — same HBM traffic (each plane fetched exactly once), different
-  on-chip mechanics; see DESIGN.md §2 for the rationale.
-
-The HWC ("let the compiler manage residency") strategy lives in
-``repro.kernels.ref`` / ``repro.core.fusion`` as pure jnp.
+The kernel bodies moved to the rank-generic engine
+(``repro.kernels.plan`` + ``repro.kernels.emit``): one pipelined
+emitter now serves ranks 1-3 and the explicit z-streaming variant is a
+rank-3 plan attribute. This module keeps the historical
+``fused_stencil3d_pallas`` signature for existing callers and tests.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import OperatorSet
-from repro.kernels.compat import element_window_spec
-
-
-def _block_derivs(
-    fblk: jnp.ndarray,
-    ops: OperatorSet,
-    rad: tuple[int, int, int],
-    tile: tuple[int, int, int],
-) -> dict[str, jnp.ndarray]:
-    """Evaluate every operator over the VMEM-resident block.
-
-    ``fblk``: (n_f, τz+2rz, τy+2ry, τx+2rx). Static slices per tap —
-    unrolled at trace time (stencil-point-wise unrolling)."""
-    rz, ry, rx = rad
-    tz, ty, tx = tile
-    out: dict[str, jnp.ndarray] = {}
-    for spec in ops.ops:
-        acc = None
-        for off, c in zip(spec.offsets, spec.coeffs):
-            oz, oy, ox = off
-            window = fblk[
-                :,
-                rz + oz : rz + oz + tz,
-                ry + oy : ry + oy + ty,
-                rx + ox : rx + ox + tx,
-            ]
-            term = jnp.asarray(c, dtype=fblk.dtype) * window
-            acc = term if acc is None else acc + term
-        out[spec.name] = acc
-    return out
-
-
-def _kernel_pipelined(f_ref, o_ref, *, ops, rad, tile, phi):
-    fblk = f_ref[...]
-    derivs = _block_derivs(fblk, ops, rad, tile)
-    o_ref[...] = phi(derivs)
-
-
-def _kernel_pipelined_aux(f_ref, aux_ref, o_ref, *, ops, rad, tile, phi):
-    fblk = f_ref[...]
-    derivs = _block_derivs(fblk, ops, rad, tile)
-    o_ref[...] = phi(derivs, aux_ref[...])
+from repro.kernels.emit import fused_stencil_pallas
+from repro.kernels.plan import plan_stencil
 
 
 def fused_stencil3d_pallas(
@@ -96,202 +28,18 @@ def fused_stencil3d_pallas(
     strategy: str = "swc",
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Apply the fused φ(A·B) update over a padded multi-field domain.
+    """Apply the fused φ(A·B) update over a padded (n_f, z, y, x) domain.
 
-    ``f_padded``: (n_f, nz+2rz, ny+2ry, nx+2rx) with per-axis radii from
-    ``ops.radius_per_axis()``. Returns (n_out, nz, ny, nx). Block dims
-    must divide the interior extents (handled by ``ops.fused_stencil3d``).
-
-    ``aux`` (n_aux, nz, ny, nx): optional extra point-wise inputs staged
-    as halo-free center tiles and passed as phi's second argument — used
-    to fuse point-wise follow-up work (e.g. the RK axpy) into the stencil
-    kernel, a beyond-paper extension of the fusion strategy.
+    Thin wrapper: lowers to a rank-3 :class:`~repro.kernels.plan.StencilPlan`
+    and hands it to the rank-generic emitter. See ``repro.kernels.emit``
+    for the strategy semantics (``swc`` pipelined, ``swc_stream``
+    explicit z-streaming, paper Figs. 5a/5b).
     """
-    if strategy == "swc_stream":
-        if aux is not None:
-            raise NotImplementedError("aux inputs: use strategy='swc'")
-        return _fused_stream(f_padded, ops, phi, n_out, block=block,
-                             interpret=interpret)
-    if strategy != "swc":
-        raise ValueError(f"unknown strategy {strategy!r}")
-    rz, ry, rx = ops.radius_per_axis()
-    tz, ty, tx = block
-    n_f = f_padded.shape[0]
-    nz = f_padded.shape[1] - 2 * rz
-    ny = f_padded.shape[2] - 2 * ry
-    nx = f_padded.shape[3] - 2 * rx
-    for name, n, t in (("z", nz, tz), ("y", ny, ty), ("x", nx, tx)):
-        if n % t:
-            raise ValueError(f"{name} extent {n} not divisible by tile {t}")
-
-    # Grid order (y, x, z): z is the innermost (fastest) axis, so the
-    # Pallas pipeline's next-block prefetch walks the z-stream — the
-    # auto-pipelined analogue of the paper's streamed z-axis.
-    grid = (ny // ty, nx // tx, nz // tz)
-    in_specs = [
-        element_window_spec(
-            (n_f, tz + 2 * rz, ty + 2 * ry, tx + 2 * rx),
-            lambda j, k, i: (0, i * tz, j * ty, k * tx),
-            window_dims=(1, 2, 3),
-        )
-    ]
-    operands = [f_padded]
-    if aux is None:
-        kernel = functools.partial(
-            _kernel_pipelined, ops=ops, rad=(rz, ry, rx),
-            tile=(tz, ty, tx), phi=phi,
-        )
-    else:
-        kernel = functools.partial(
-            _kernel_pipelined_aux, ops=ops, rad=(rz, ry, rx),
-            tile=(tz, ty, tx), phi=phi,
-        )
-        in_specs.append(
-            pl.BlockSpec(
-                (aux.shape[0], tz, ty, tx), lambda j, k, i: (0, i, j, k)
-            )
-        )
-        operands.append(aux)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (n_out, tz, ty, tx), lambda j, k, i: (0, i, j, k)
-        ),
-        out_shape=jax.ShapeDtypeStruct((n_out, nz, ny, nx), f_padded.dtype),
-        interpret=interpret,
-    )(*operands)
-
-
-# ---------------------------------------------------------------------------
-# Fig. 5b: explicit z-streaming with carried halo planes + prefetch DMA.
-# ---------------------------------------------------------------------------
-
-
-def _kernel_stream(
-    f_hbm, o_hbm, work, pf0, pf1, outbuf, sem_pf, sem_out, *,
-    ops, rad, tile, phi, n_chunks, n_f, n_out,
-):
-    """Grid step = one (y, x) tile; the kernel streams all z-chunks.
-
-    VMEM scratch:
-      ``work``  (n_f, τz+2rz, τy+2ry, τx+2rx) — the working set;
-      ``pf0/1`` (n_f, τz,     τy+2ry, τx+2rx) — double-buffered prefetch
-                 of the τz fresh planes for the next chunk;
-      ``outbuf``(n_out, τz, τy, τx)           — staging for output DMA.
-    """
-    j = pl.program_id(0)
-    k = pl.program_id(1)
-    rz, ry, rx = rad
-    tz, ty, tx = tile
-    y0 = j * ty
-    x0 = k * tx
-
-    def fresh_copy(chunk, pf_ref, slot):
-        """DMA the τz fresh planes of ``chunk`` into a prefetch buffer."""
-        return pltpu.make_async_copy(
-            f_hbm.at[
-                :,
-                pl.ds(chunk * tz + 2 * rz, tz),
-                pl.ds(y0, ty + 2 * ry),
-                pl.ds(x0, tx + 2 * rx),
-            ],
-            pf_ref,
-            sem_pf.at[slot],
-        )
-
-    # Prologue: leading halo planes go straight into the working buffer;
-    # chunk 0's fresh planes start streaming into prefetch slot 0.
-    halo_cp = pltpu.make_async_copy(
-        f_hbm.at[:, pl.ds(0, 2 * rz), pl.ds(y0, ty + 2 * ry),
-                 pl.ds(x0, tx + 2 * rx)],
-        work.at[:, pl.ds(0, 2 * rz)],
-        sem_out,  # reuse; waited below before any compute
+    plan = plan_stencil(
+        ops, f_padded.shape, n_out, strategy=strategy, block=block,
+        dtype=str(f_padded.dtype),
+        n_aux=aux.shape[0] if aux is not None else 0,
     )
-    halo_cp.start()
-    fresh_copy(0, pf0, 0).start()
-    halo_cp.wait()
-
-    def body(chunk, _):
-        slot = jax.lax.rem(chunk, 2)
-
-        # Kick off the NEXT chunk's fresh-plane DMA before computing this
-        # one (the paper's "prefetch buffer updated in parallel with
-        # computations").
-        @pl.when(chunk + 1 < n_chunks)
-        def _():
-            @pl.when(slot == 0)
-            def _():
-                fresh_copy(chunk + 1, pf1, 1).start()
-
-            @pl.when(slot == 1)
-            def _():
-                fresh_copy(chunk + 1, pf0, 0).start()
-
-        # Land this chunk's fresh planes behind the carried halo.
-        @pl.when(slot == 0)
-        def _():
-            fresh_copy(chunk, pf0, 0).wait()
-            work[:, pl.ds(2 * rz, tz)] = pf0[...]
-
-        @pl.when(slot == 1)
-        def _():
-            fresh_copy(chunk, pf1, 1).wait()
-            work[:, pl.ds(2 * rz, tz)] = pf1[...]
-
-        fblk = work[...]
-        derivs = _block_derivs(fblk, ops, (rz, ry, rx), (tz, ty, tx))
-        outbuf[...] = phi(derivs)
-        out_cp = pltpu.make_async_copy(
-            outbuf,
-            o_hbm.at[:, pl.ds(chunk * tz, tz), pl.ds(y0, ty), pl.ds(x0, tx)],
-            sem_out,
-        )
-        out_cp.start()
-
-        # Carry the trailing halo: last 2rz planes become the next chunk's
-        # leading halo (VMEM-to-VMEM plane copy; see module docstring on
-        # why TPU prefers this over the circular buffer).
-        work[:, pl.ds(0, 2 * rz)] = work[:, pl.ds(tz, 2 * rz)]
-        out_cp.wait()
-        return 0
-
-    jax.lax.fori_loop(0, n_chunks, body, 0)
-
-
-def _fused_stream(
-    f_padded, ops, phi, n_out, *, block=(8, 8, 128), interpret=False
-):
-    rz, ry, rx = ops.radius_per_axis()
-    tz, ty, tx = block
-    n_f = f_padded.shape[0]
-    nz = f_padded.shape[1] - 2 * rz
-    ny = f_padded.shape[2] - 2 * ry
-    nx = f_padded.shape[3] - 2 * rx
-    for name, n, t in (("z", nz, tz), ("y", ny, ty), ("x", nx, tx)):
-        if n % t:
-            raise ValueError(f"{name} extent {n} not divisible by tile {t}")
-    n_chunks = nz // tz
-    dtype = f_padded.dtype
-
-    kernel = functools.partial(
-        _kernel_stream, ops=ops, rad=(rz, ry, rx), tile=(tz, ty, tx),
-        phi=phi, n_chunks=n_chunks, n_f=n_f, n_out=n_out,
+    return fused_stencil_pallas(
+        f_padded, ops, phi, plan, aux=aux, interpret=interpret
     )
-    return pl.pallas_call(
-        kernel,
-        grid=(ny // ty, nx // tx),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((n_out, nz, ny, nx), dtype),
-        scratch_shapes=[
-            pltpu.VMEM((n_f, tz + 2 * rz, ty + 2 * ry, tx + 2 * rx), dtype),
-            pltpu.VMEM((n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
-            pltpu.VMEM((n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
-            pltpu.VMEM((n_out, tz, ty, tx), dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA,
-        ],
-        interpret=interpret,
-    )(f_padded)

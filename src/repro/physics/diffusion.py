@@ -60,8 +60,13 @@ class DiffusionProblem:
     def step_op(
         self,
         strategy: str = "hwc",
-        block: tuple[int, int, int] | str = (8, 8, 128),
+        block: tuple[int, ...] | str | None = None,
     ) -> FusedStencilOp:
+        """One forward-Euler step as a fused op. ``strategy="swc"``
+        lowers through the rank-generic engine at any dimensionality
+        (1-D/2-D/3-D); ``block`` is a rank-length tile, ``"auto"`` for
+        the persistent tuning cache, or None for the per-rank default.
+        """
         spec = dataclasses.replace(self.merged_stencil(), name="step")  # type: ignore[arg-type]
         ops = OperatorSet((spec,))
         return FusedStencilOp(
@@ -121,7 +126,7 @@ def simulate(
     n_steps: int,
     *,
     strategy: str = "hwc",
-    block: tuple[int, int, int] = (8, 8, 128),
+    block: tuple[int, ...] | str | None = None,
 ) -> jnp.ndarray:
     """Run ``n_steps`` of forward-Euler diffusion with the fused engine."""
     op = problem.step_op(strategy, block)

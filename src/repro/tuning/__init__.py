@@ -2,14 +2,15 @@
 
 Layers:
 
-* ``costmodel`` — structural candidate enumeration + the measurement
-  protocol (promoted from ``repro.core.autotune``, which remains as a
-  deprecation shim);
+* ``costmodel`` — structural candidate enumeration (rank-generic) + the
+  measurement protocol;
 * ``cache``     — persistent per-platform JSON store
   (``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-tune/``), schema-versioned;
 * ``session``   — structural-rank → measure-top-k → record, with a
-  cache-hit fast path; the ``block="auto"`` resolvers for the fused 3-D
-  stencil and the 1-D kernels live here;
+  cache-hit fast path; the ``block="auto"`` resolvers live here. The
+  fused-engine resolver (``auto_block_nd``) keys the cache on the
+  serialized ``StencilPlan`` identity, so rank-1/2/3 problems share one
+  persistent cache with distinct, stable keys;
 * ``cli``       — ``python -m repro.tuning warm|show|clear``.
 """
 from repro.tuning.cache import (  # noqa: F401
@@ -28,9 +29,11 @@ from repro.tuning.costmodel import (  # noqa: F401
     SUBLANE,
     VMEM_BUDGET,
     autotune,
+    axis_tile_options,
     domain_axis_options,
     enumerate_candidates,
     enumerate_candidates_1d,
+    enumerate_candidates_nd,
     halo_overhead,
     time_candidate,
     vmem_working_set,
@@ -40,10 +43,14 @@ from repro.tuning.session import (  # noqa: F401
     TuningSession,
     auto_block_3d,
     auto_block_conv1d,
+    auto_block_nd,
     auto_block_xcorr1d,
     default_session,
     enable_auto,
     fused3d_candidates,
     fused3d_key,
+    fused_nd_candidates,
+    fused_nd_key,
     lookup_fused3d,
+    lookup_fused_nd,
 )

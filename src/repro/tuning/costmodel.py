@@ -19,6 +19,7 @@ this module lives in ``repro.tuning.cache`` / ``repro.tuning.session``.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Callable, Iterable, Sequence
 
@@ -34,35 +35,83 @@ SUBLANE = 8
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    block: tuple[int, int, int]
+    block: tuple[int, ...]  # rank-length tile, x last
     vmem_bytes: int
     halo_overhead: float  # redundant-fetch fraction vs perfect reuse
     score: float  # structural cost-model score (lower = better)
 
 
 def vmem_working_set(
-    block: tuple[int, int, int],
-    radii: tuple[int, int, int],
+    block: Sequence[int],
+    radii: Sequence[int],
     n_f: int,
     n_out: int,
     itemsize: int,
 ) -> int:
-    tz, ty, tx = block
-    rz, ry, rx = radii
-    inp = n_f * (tz + 2 * rz) * (ty + 2 * ry) * (tx + 2 * rx)
-    out = n_out * tz * ty * tx
+    """VMEM footprint of one pipelined block, any rank."""
+    inp = n_f
+    out = n_out
+    for t, r in zip(block, radii):
+        inp *= t + 2 * r
+        out *= t
     # Pallas double-buffers pipelined blocks: 2x input.
     return (2 * inp + out) * itemsize
 
 
-def halo_overhead(
-    block: tuple[int, int, int], radii: tuple[int, int, int]
-) -> float:
-    tz, ty, tx = block
-    rz, ry, rx = radii
-    fetched = (tz + 2 * rz) * (ty + 2 * ry) * (tx + 2 * rx)
-    useful = tz * ty * tx
+def halo_overhead(block: Sequence[int], radii: Sequence[int]) -> float:
+    fetched, useful = 1, 1
+    for t, r in zip(block, radii):
+        fetched *= t + 2 * r
+        useful *= t
     return fetched / useful - 1.0
+
+
+def enumerate_candidates_nd(
+    domain: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int = 4,
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+    axis_options: Sequence[Sequence[int]] | None = None,
+) -> list[Candidate]:
+    """Generate, filter (divisibility + VMEM), and rank block shapes for
+    a rank-1/2/3 domain (the planner's search space — blocks are listed
+    in axis order, x last). ``axis_options`` overrides the per-axis tile
+    bases (same order)."""
+    domain = tuple(domain)
+    rank = len(domain)
+    if axis_options is None:
+        axis_options = axis_tile_options(domain)
+    out: list[Candidate] = []
+    for raw in itertools.product(*axis_options):
+        blk = []
+        ok = True
+        for n, t in zip(domain, raw):
+            if n % t and t != n:
+                ok = False
+                break
+            blk.append(min(t, n))
+        if not ok:
+            continue
+        blk = tuple(blk)
+        vm = vmem_working_set(blk, radii, n_f, n_out, itemsize)
+        if vm > vmem_budget:
+            continue  # the "failed launch" discard
+        ho = halo_overhead(blk, radii)
+        # Structural score: effective HBM traffic multiplier, with mild
+        # penalties for lane-misaligned x tiles, very small z tiles at
+        # rank 3 (pipeline bubble per block), and — at rank 1, where the
+        # grid-step count is the only parallel axis — short blocks that
+        # don't amortize the per-step pipeline overhead.
+        align_pen = 0.0 if blk[-1] % LANE == 0 else 0.15
+        bubble_pen = 0.05 if rank == 3 and blk[0] < 4 else 0.0
+        step_pen = LANE / blk[-1] if rank == 1 else 0.0
+        score = (1.0 + ho) * (1.0 + align_pen + bubble_pen + step_pen)
+        out.append(Candidate(blk, vm, ho, score))
+    out.sort(key=lambda c: c.score)
+    return out
 
 
 def enumerate_candidates(
@@ -77,48 +126,53 @@ def enumerate_candidates(
     ty_options: Sequence[int] = (4, 8, 16, 32),
     tz_options: Sequence[int] = (2, 4, 8, 16, 32),
 ) -> list[Candidate]:
-    """Generate, filter (divisibility + VMEM), and rank block shapes."""
-    nz, ny, nx = domain
-    out: list[Candidate] = []
-    for tx in tx_options:
-        if nx % tx and tx != nx:
-            continue
-        tx_eff = min(tx, nx)
-        for ty in ty_options:
-            if ny % ty and ty != ny:
-                continue
-            ty_eff = min(ty, ny)
-            for tz in tz_options:
-                if nz % tz and tz != nz:
-                    continue
-                tz_eff = min(tz, nz)
-                blk = (tz_eff, ty_eff, tx_eff)
-                vm = vmem_working_set(blk, radii, n_f, n_out, itemsize)
-                if vm > vmem_budget:
-                    continue  # the "failed launch" discard
-                ho = halo_overhead(blk, radii)
-                # Structural score: effective HBM traffic multiplier, with
-                # a mild penalty for lane-misaligned x tiles and very
-                # small z tiles (pipeline bubble per block).
-                align_pen = 0.0 if tx_eff % LANE == 0 else 0.15
-                bubble_pen = 0.05 if tz_eff < 4 else 0.0
-                score = (1.0 + ho) * (1.0 + align_pen + bubble_pen)
-                out.append(Candidate(blk, vm, ho, score))
-    out.sort(key=lambda c: c.score)
-    return out
+    """Rank-3 enumeration (historical signature) — delegates to
+    :func:`enumerate_candidates_nd`."""
+    return enumerate_candidates_nd(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        axis_options=(tz_options, ty_options, tx_options),
+    )
+
+
+# Per-axis tile bases: x spans the 128-wide lane dimension; at rank 1 it
+# is the only axis, so long blocks dominate. y/z use the paper's
+# TPU-friendly sublane/streaming bases.
+X_BASE_1D = (512, 1024, 2048, 4096, 8192)
+X_BASE = (64, 128, 256, 512)
+Y_BASE = (4, 8, 16, 32)
+Z_BASE = (2, 4, 8, 16, 32)
+
+
+def axis_tile_options(
+    domain: Sequence[int],
+) -> tuple[tuple[int, ...], ...]:
+    """Per-axis tile options adapted to the actual extents, any rank:
+    the TPU-friendly bases, each capped at the axis extent (so small
+    research domains like 16³ still enumerate valid candidates), plus
+    the full extent itself."""
+    rank = len(domain)
+
+    def opts(n: int, base: Sequence[int]) -> tuple[int, ...]:
+        kept = [o for o in base if o <= n] + [n]
+        return tuple(dict.fromkeys(kept))
+
+    bases = {
+        1: (X_BASE_1D,),
+        2: (Y_BASE, X_BASE),
+        3: (Z_BASE, Y_BASE, X_BASE),
+    }[rank]
+    return tuple(opts(n, b) for n, b in zip(domain, bases))
 
 
 def domain_axis_options(
     domain: tuple[int, int, int],
     *,
-    tx_base: Sequence[int] = (64, 128, 256, 512),
-    ty_base: Sequence[int] = (4, 8, 16, 32),
-    tz_base: Sequence[int] = (2, 4, 8, 16, 32),
+    tx_base: Sequence[int] = X_BASE,
+    ty_base: Sequence[int] = Y_BASE,
+    tz_base: Sequence[int] = Z_BASE,
 ) -> tuple[tuple[int, ...], tuple[int, ...], tuple[int, ...]]:
-    """Per-axis tile options adapted to the actual extents: the paper's
-    TPU-friendly bases, each capped at the axis extent (so small research
-    domains like 16³ still enumerate valid candidates), plus the full
-    extent itself."""
+    """Rank-3 per-axis options (historical signature; see
+    :func:`axis_tile_options`)."""
     nz, ny, nx = domain
 
     def opts(n: int, base: Sequence[int]) -> tuple[int, ...]:

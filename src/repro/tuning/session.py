@@ -28,9 +28,8 @@ from repro.tuning.cache import (
 from repro.tuning.costmodel import (
     Candidate,
     VMEM_BUDGET,
-    domain_axis_options,
-    enumerate_candidates,
     enumerate_candidates_1d,
+    enumerate_candidates_nd,
     time_candidate,
 )
 
@@ -138,8 +137,34 @@ def _is_concrete(x) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Fused 3-D stencil kernel glue (`block="auto"` in the fusion engine).
+# Fused stencil engine glue (`block="auto"` at any rank). Cache keys are
+# the serialized plan identity (StencilPlan.tuning_key), so rank-1/2/3
+# problems share one persistent cache with distinct, stable keys.
 # ---------------------------------------------------------------------------
+
+
+def fused_nd_key(
+    domain: tuple[int, ...],
+    radii: tuple[int, ...],
+    n_f: int,
+    n_out: int,
+    dtype: str,
+    strategy: str,
+    backend: str | None = None,
+    unroll: int = 1,
+) -> TuningKey:
+    """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``)."""
+    rank = len(domain)
+    return TuningKey(
+        kernel=f"fused_stencil{rank}d",
+        strategy=strategy if unroll == 1 else f"{strategy}:u{unroll}",
+        domain=tuple(domain),
+        radii=tuple(radii),
+        n_f=n_f,
+        n_out=n_out,
+        dtype=str(dtype),
+        backend=backend if backend is not None else current_backend(),
+    )
 
 
 def fused3d_key(
@@ -151,16 +176,34 @@ def fused3d_key(
     strategy: str,
     backend: str | None = None,
 ) -> TuningKey:
-    return TuningKey(
-        kernel="fused_stencil3d",
-        strategy=strategy,
-        domain=tuple(domain),
-        radii=tuple(radii),
-        n_f=n_f,
-        n_out=n_out,
-        dtype=str(dtype),
-        backend=backend if backend is not None else current_backend(),
+    return fused_nd_key(domain, radii, n_f, n_out, dtype, strategy, backend)
+
+
+def fused_nd_candidates(
+    domain: tuple[int, ...],
+    radii: tuple[int, ...],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+) -> list[Candidate]:
+    """Structurally-ranked block shapes for a rank-1/2/3 domain, with
+    graceful degradation: if nothing fits the VMEM budget, re-enumerate
+    without the filter and keep only the smallest-footprint shape so
+    ``auto`` still resolves (marked ``fallback`` by the caller)."""
+    cands = enumerate_candidates_nd(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
     )
+    if cands:
+        return cands
+    unfiltered = enumerate_candidates_nd(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=2**63
+    )
+    if not unfiltered:
+        return []
+    smallest = min(unfiltered, key=lambda c: c.vmem_bytes)
+    return [smallest]
 
 
 def fused3d_candidates(
@@ -172,30 +215,13 @@ def fused3d_candidates(
     *,
     vmem_budget: int = VMEM_BUDGET,
 ) -> list[Candidate]:
-    """Structurally-ranked block shapes for this domain, with graceful
-    degradation: if nothing fits the VMEM budget, re-enumerate without
-    the filter and keep only the smallest-footprint shape so ``auto``
-    still resolves (marked ``fallback`` by the caller)."""
-    tz_o, ty_o, tx_o = domain_axis_options(domain)
-    cands = enumerate_candidates(
-        domain, radii, n_f, n_out, itemsize,
-        vmem_budget=vmem_budget,
-        tx_options=tx_o, ty_options=ty_o, tz_options=tz_o,
+    """Historical rank-3 alias of :func:`fused_nd_candidates`."""
+    return fused_nd_candidates(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
     )
-    if cands:
-        return cands
-    unfiltered = enumerate_candidates(
-        domain, radii, n_f, n_out, itemsize,
-        vmem_budget=2**63, tx_options=tx_o, ty_options=ty_o,
-        tz_options=tz_o,
-    )
-    if not unfiltered:
-        return []
-    smallest = min(unfiltered, key=lambda c: c.vmem_bytes)
-    return [smallest]
 
 
-def auto_block_3d(
+def auto_block_nd(
     f_padded,
     ops,
     phi,
@@ -203,30 +229,39 @@ def auto_block_3d(
     *,
     aux=None,
     strategy: str = "swc",
+    unroll: int = 1,
     interpret: bool = False,
     session: TuningSession | None = None,
     vmem_budget: int = VMEM_BUDGET,
-) -> tuple[int, int, int]:
-    """Resolve ``block="auto"`` for the fused 3-D kernel.
+) -> tuple[int, ...]:
+    """Resolve ``block="auto"`` for the fused engine at any rank.
 
     Eager call sites get the full protocol (measure top-k on the actual
     operand, persist); traced call sites get the cache or the structural
-    winner. Returns a concrete (τz, τy, τx)."""
+    winner. Returns a concrete rank-length block (x last).
+
+    The cache key is derived from an actual planned ``StencilPlan`` (a
+    probe lowering with the default block), so it always reflects the
+    configuration the kernel will execute — e.g. an unroll factor the
+    planner degrades to 1 is keyed as 1."""
+    from repro.kernels.plan import DEFAULT_BLOCKS, plan_stencil
+
     sess = session if session is not None else default_session()
-    radii = ops.radius_per_axis()
-    n_f = f_padded.shape[0]
-    domain = tuple(
-        f_padded.shape[1 + a] - 2 * radii[a] for a in range(3)
+    probe = plan_stencil(
+        ops, f_padded.shape, n_out, strategy=strategy,
+        dtype=str(f_padded.dtype),
+        n_aux=aux.shape[0] if aux is not None else 0,
+        unroll=unroll,
     )
+    rank, domain, radii = probe.rank, probe.interior, probe.radii
+    n_f = probe.n_f
     itemsize = f_padded.dtype.itemsize
-    key = fused3d_key(
-        domain, radii, n_f, n_out, str(f_padded.dtype), strategy
-    )
-    cands = fused3d_candidates(
+    key = probe.tuning_key()
+    cands = fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
     )
-    if not cands:  # degenerate domain: let the wrapper clamp a default
-        return (8, 8, 128)
+    if not cands:  # degenerate domain: let the planner clamp a default
+        return DEFAULT_BLOCKS[rank]
     if cands[0].vmem_bytes > vmem_budget:
         # Nothing fits VMEM: degrade to the smallest-footprint shape
         # without measuring (a real launch could OOM), and persist it so
@@ -241,13 +276,14 @@ def auto_block_3d(
 
     measure = None
     if _is_concrete(f_padded):
-        from repro.kernels.stencil3d import fused_stencil3d_pallas
+        from repro.kernels import ops as kops
 
         def measure(blk):
             def fn():
-                return fused_stencil3d_pallas(
+                return kops.fused_stencil_nd(
                     f_padded, ops, phi, n_out, aux=aux, block=blk,
-                    strategy=strategy, interpret=interpret,
+                    strategy=strategy, unroll=probe.unroll,
+                    interpret=interpret,
                 )
 
             return time_candidate(
@@ -258,6 +294,50 @@ def auto_block_3d(
     return tuple(record.block)
 
 
+def auto_block_3d(
+    f_padded,
+    ops,
+    phi,
+    n_out: int,
+    *,
+    aux=None,
+    strategy: str = "swc",
+    interpret: bool = False,
+    session: TuningSession | None = None,
+    vmem_budget: int = VMEM_BUDGET,
+) -> tuple[int, int, int]:
+    """Historical rank-3 alias of :func:`auto_block_nd`."""
+    return auto_block_nd(
+        f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
+        interpret=interpret, session=session, vmem_budget=vmem_budget,
+    )
+
+
+def lookup_fused_nd(
+    f_interior,
+    ops,
+    n_out: int,
+    strategy: str,
+    session: TuningSession | None = None,
+    unroll: int = 1,
+) -> TuningRecord | None:
+    """Cached record for a fused stencil call on an UNPADDED field
+    stack (n_f, *spatial) — the read-only mirror of the key derivation
+    in ``auto_block_nd``, for benchmarks/examples that want to report
+    which block ``"auto"`` resolved to."""
+    sess = session if session is not None else default_session()
+    key = fused_nd_key(
+        tuple(f_interior.shape[1:]),
+        ops.radius_per_axis(),
+        f_interior.shape[0],
+        n_out,
+        str(f_interior.dtype),
+        strategy,
+        unroll=unroll,
+    )
+    return sess.cache.get(key)
+
+
 def lookup_fused3d(
     f_interior,
     ops,
@@ -265,20 +345,10 @@ def lookup_fused3d(
     strategy: str,
     session: TuningSession | None = None,
 ) -> TuningRecord | None:
-    """Cached record for a fused 3-D stencil call on an UNPADDED field
-    stack (n_f, nz, ny, nx) — the read-only mirror of the key derivation
-    in ``auto_block_3d``, for benchmarks/examples that want to report
-    which block ``"auto"`` resolved to."""
-    sess = session if session is not None else default_session()
-    key = fused3d_key(
-        tuple(f_interior.shape[1:]),
-        ops.radius_per_axis(),
-        f_interior.shape[0],
-        n_out,
-        str(f_interior.dtype),
-        strategy,
+    """Historical rank-3 alias of :func:`lookup_fused_nd`."""
+    return lookup_fused_nd(
+        f_interior, ops, n_out, strategy, session=session
     )
-    return sess.cache.get(key)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,21 @@ def _warm_diffusion3d(full: bool) -> None:
         op(f0)
 
 
+def _warm_diffusion_lowdim(full: bool) -> None:
+    """Rank-1/2 fused plans (the engine's new dimensionalities)."""
+    from repro.physics.diffusion import DiffusionProblem
+
+    shapes = [
+        ((1 << 22,) if full else (1 << 14,)),
+        ((2048, 2048) if full else (64, 128)),
+    ]
+    for shape in shapes:
+        for acc in (2, 6):
+            p = DiffusionProblem(shape, accuracy=acc)
+            op = p.step_op("swc", block="auto")
+            op(p.init_field())
+
+
 def _warm_mhd(full: bool) -> None:
     from repro.physics.mhd import MHDSolver
 
@@ -100,6 +115,7 @@ def warm_model_kernels(cfg, batch: int, seq_len: int, dtype=None) -> int:
 
 REGISTRY: tuple[WarmEntry, ...] = (
     WarmEntry("fig11/diffusion3d_swc", _warm_diffusion3d),
+    WarmEntry("fig11/diffusion1d2d_swc", _warm_diffusion_lowdim),
     WarmEntry("fig13-14/mhd_swc", _warm_mhd),
     WarmEntry("fig13/mhd_swc_stream", _warm_mhd_stream),
     WarmEntry("fig07-09/xcorr1d", _warm_xcorr1d),

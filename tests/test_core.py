@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import rooflinelib as rl
-from repro.core.autotune import (
+from repro.tuning import (
     enumerate_candidates,
     halo_overhead,
     vmem_working_set,
@@ -94,6 +94,11 @@ def test_vmem_filter_discards_oversized_blocks():
     )
     assert cands, "some candidate must fit"
     assert all(c.vmem_bytes <= 2 * 1024 * 1024 for c in cands)
+    # candidate accounting agrees with the working-set formula
+    assert all(
+        c.vmem_bytes == vmem_working_set(c.block, (3, 3, 3), 8, 8, 4)
+        for c in cands
+    )
 
 
 def test_halo_overhead_monotone_in_block_size():

@@ -1,0 +1,201 @@
+"""Rank-generic fused stencil engine tests: the StencilPlan lowering
+layer (planner validation/clamping), swc-vs-hwc parity across rank ∈
+{1, 2, 3} × dtype ∈ {float32, float64} × non-block-divisible shapes,
+element-wise unrolling, and plan-keyed ``block="auto"`` resolution
+through the persistent tuning cache at every rank."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.fusion import FusedStencilOp  # noqa: E402
+from repro.core.stencil import derivative_operator_set  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.plan import plan_stencil  # noqa: E402
+from repro.tuning import TuningCache  # noqa: E402
+
+RNG = np.random.default_rng(11)
+
+# Deliberately not divisible by the per-rank default blocks.
+SHAPES = {1: (200,), 2: (12, 36), 3: (6, 10, 24)}
+
+
+def _problem(ndim, dtype, accuracy=4, n_f=2):
+    """An OperatorSet + nonlinear phi + padded operand at ``ndim``."""
+    opset = derivative_operator_set(ndim, accuracy, spacing=0.3)
+    names = opset.names
+
+    def phi(d):
+        acc = sum(d[n] for n in names)
+        return jnp.stack(
+            [jnp.tanh(acc[0]) + d["val"][-1] * d["dx"][0], acc[-1] * 0.5]
+        )
+
+    r = opset.radius
+    shape = SHAPES[ndim]
+    f = jnp.asarray(
+        RNG.standard_normal((n_f,) + tuple(s + 2 * r for s in shape)),
+        dtype,
+    )
+    return opset, phi, f
+
+
+# --- planner -------------------------------------------------------------------
+
+
+def test_plan_defaults_and_clamping():
+    for ndim in (1, 2, 3):
+        opset, _, f = _problem(ndim, jnp.float32)
+        plan = plan_stencil(opset, f.shape, 2)
+        assert plan.rank == ndim
+        assert plan.interior == SHAPES[ndim]
+        # clamped blocks always tile the interior exactly
+        for n, t in zip(plan.interior, plan.block):
+            assert n % t == 0
+
+
+def test_plan_truncates_longer_blocks_x_last():
+    opset, _, f = _problem(2, jnp.float32)
+    plan = plan_stencil(opset, f.shape, 1, block=(8, 8, 128))
+    assert plan.rank == 2
+    # trailing (y, x) entries kept, then clamped to divisors of (12, 36)
+    assert plan.block == (6, 36)
+
+
+def test_plan_rejects_swc_stream_below_rank3():
+    opset, _, f = _problem(2, jnp.float32)
+    with pytest.raises(ValueError, match="rank-3"):
+        plan_stencil(opset, f.shape, 1, strategy="swc_stream")
+    with pytest.raises(ValueError, match="swc_stream"):
+        FusedStencilOp(opset, lambda d: d["val"], 1, strategy="swc_stream")
+
+
+def test_plan_unroll_degrades_when_not_divisible():
+    opset, _, f = _problem(1, jnp.float32)  # interior 200
+    plan = plan_stencil(opset, f.shape, 1, block=(32,), unroll=7)
+    assert plan.unroll == 1  # 200 % 7 != 0 → element-wise unroll dropped
+    plan = plan_stencil(opset, f.shape, 1, block=(32,), unroll=2)
+    assert plan.unroll == 2 and (plan.block[-1] * 2) <= 200
+    assert 200 % (plan.block[-1] * 2) == 0
+
+
+def test_plan_tuning_keys_distinct_and_stable():
+    """Rank-1/2/3 plans key the SAME persistent cache with distinct,
+    stable ids (satellite acceptance)."""
+    ids = {}
+    for ndim in (1, 2, 3):
+        opset, _, f = _problem(ndim, jnp.float32)
+        plan = plan_stencil(opset, f.shape, 2)
+        key = plan.tuning_key(backend="cpu")
+        assert key.kernel == f"fused_stencil{ndim}d"
+        # stable: re-deriving the plan reproduces the id bit-for-bit
+        again = plan_stencil(opset, f.shape, 2).tuning_key(backend="cpu")
+        assert key.cache_id == again.cache_id
+        ids[ndim] = key.cache_id
+    assert len(set(ids.values())) == 3
+    # the unroll factor is part of the codegen config → part of the key
+    opset, _, f = _problem(1, jnp.float32)
+    k1 = plan_stencil(opset, f.shape, 2, block=(25,), unroll=2)
+    assert k1.tuning_key("cpu").cache_id != ids[1]
+
+
+# --- swc vs hwc parity ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_swc_matches_hwc_all_ranks(ndim, dtype):
+    opset, phi, f = _problem(ndim, dtype)
+    out = kops.fused_stencil_nd(
+        f, opset, phi, 2, strategy="swc", interpret=True
+    )
+    expect = ref.fused_stencil(f, opset, phi)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-10
+    assert out.dtype == expect.dtype
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_swc_unroll_matches_reference(ndim):
+    opset, phi, f = _problem(ndim, jnp.float32)
+    block = {1: (25,), 2: (6, 9), 3: (3, 5, 6)}[ndim]
+    out = kops.fused_stencil_nd(
+        f, opset, phi, 2, strategy="swc", block=block, unroll=2,
+        interpret=True,
+    )
+    expect = ref.fused_stencil(f, opset, phi)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("ndim", [1, 2])
+def test_fusion_op_routes_swc_below_rank3(ndim):
+    """FusedStencilOp(strategy='swc') is Pallas-backed (not the XLA
+    fallback) at rank 1/2 — the tentpole acceptance criterion."""
+    opset, phi, f = _problem(ndim, jnp.float32)
+    r = opset.radius
+    interior = tuple(s - 2 * r for s in f.shape[1:])
+    f_in = f[(slice(None),) + tuple(slice(r, r + n) for n in interior)]
+    swc = FusedStencilOp(opset, phi, 2, strategy="swc")
+    hwc = FusedStencilOp(opset, phi, 2, strategy="hwc")
+    np.testing.assert_allclose(
+        np.asarray(swc(f_in)), np.asarray(hwc(f_in)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_aux_inputs_all_ranks():
+    for ndim in (1, 2, 3):
+        opset, _, f = _problem(ndim, jnp.float32)
+        interior = SHAPES[ndim]
+        aux = jnp.asarray(
+            RNG.standard_normal((2,) + interior), jnp.float32
+        )
+
+        def phi(d, a):
+            return d["val"] * 0.5 + a * d["dxx"]
+
+        out = kops.fused_stencil_nd(
+            f, opset, phi, 2, aux=aux, strategy="swc", interpret=True
+        )
+        expect = ref.fused_stencil(f, opset, phi, aux=aux)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4
+        )
+
+
+# --- block="auto" through the persistent cache at every rank -------------------
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    return tmp_path
+
+
+def test_auto_resolves_per_rank_through_cache(cache_dir):
+    """``block="auto"`` measures-and-persists one record per rank, and
+    the swc result matches hwc (the PR acceptance criterion)."""
+    for ndim in (1, 2, 3):
+        opset, phi, f = _problem(ndim, jnp.float32)
+        r = opset.radius
+        interior = SHAPES[ndim]
+        f_in = f[(slice(None),) + tuple(slice(r, r + n) for n in interior)]
+        auto = FusedStencilOp(opset, phi, 2, strategy="swc", block="auto")
+        hwc = FusedStencilOp(opset, phi, 2, strategy="hwc")
+        np.testing.assert_allclose(
+            np.asarray(auto(f_in)), np.asarray(hwc(f_in)),
+            rtol=1e-4, atol=1e-4,
+        )
+    keys = list(TuningCache().items())
+    for ndim in (1, 2, 3):
+        assert any(
+            k.startswith(f"fused_stencil{ndim}d|swc|") for k in keys
+        ), keys
