@@ -3,7 +3,14 @@
 now runs at every rank through the StencilPlan lowering layer. The SWC
 block comes from the tuning subsystem (``block="auto"``): the eager warm
 call measures-and-records on a cache miss, the jitted timing loop
-replays the persisted winner."""
+replays the persisted winner.
+
+``fuse_steps > 1`` (the ``--fuse-steps`` driver flag) additionally
+benchmarks temporal fusion: one kernel advances that many Euler steps
+on halo-widened VMEM blocks, timings are reported PER STEP, and the
+derived column carries the traffic model's predicted HBM reduction so
+measured and modeled wins land in the same artifact row.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,16 +18,22 @@ import numpy as np
 
 from benchmarks.util import emit, smoke, time_fn
 from repro.core.rooflinelib import TPU_V5E
+from repro.core.trafficmodel import stencil_traffic_reduction
 from repro.physics.diffusion import DiffusionProblem
 from repro.tuning import format_block, lookup_fused_nd
 
 
-def run(full: bool = False, dims: tuple[int, ...] = (1, 2, 3)) -> None:
+def run(
+    full: bool = False,
+    dims: tuple[int, ...] = (1, 2, 3),
+    fuse_steps: int = 1,
+) -> None:
     shapes = {
         1: (1 << (22 if full else 14 if smoke() else 18),),
         2: ((2048, 2048) if full else (64, 64) if smoke() else (256, 256)),
         3: ((256,) * 3 if full else (16,) * 3 if smoke() else (32, 32, 64)),
     }
+    suffix = f"_f{fuse_steps}" if fuse_steps != 1 else ""
     for ndim, shape in shapes.items():
         if ndim not in dims:
             continue
@@ -32,18 +45,29 @@ def run(full: bool = False, dims: tuple[int, ...] = (1, 2, 3)) -> None:
             for strat in ("hwc", "swc"):
                 tuned = ""
                 if strat == "swc":
-                    op = p.step_op(strat, block="auto")
+                    op = p.step_op(strat, block="auto", fuse_steps=fuse_steps)
                     op(f0)  # eager: tune-and-persist on a cache miss
-                    rec = lookup_fused_nd(f0, op.ops, 1, "swc")
+                    rec = lookup_fused_nd(
+                        f0, op.ops, 1, "swc", fuse_steps=fuse_steps
+                    )
                     if rec is not None:
                         tuned = (f";tuned_block={format_block(rec.block)}"
                                  f";tuned_src={rec.source}")
+                        if fuse_steps != 1:
+                            ratio = stencil_traffic_reduction(
+                                shape, (p.radius,) * ndim, 1, 1, 4,
+                                block_base=rec.block,
+                                block_fused=rec.block,
+                                fuse_steps=fuse_steps,
+                            )
+                            tuned += f";traffic_model_x={ratio:.2f}"
                 else:
-                    op = p.step_op(strat)
+                    op = p.step_op(strat, fuse_steps=fuse_steps)
                 jitted = jax.jit(op)
-                t = time_fn(jitted, f0, iters=3)
+                t = time_fn(jitted, f0, iters=3) / fuse_steps
                 emit(
-                    f"fig11/diffusion_fused/{ndim}d_r{p.radius}_{strat}", t,
+                    f"fig11/diffusion_fused/{ndim}d_r{p.radius}"
+                    f"_{strat}{suffix}", t,
                     f"Mupdates_per_s={n / t / 1e6:.1f};"
                     f"tpu_bw_bound_s={roof:.2e}" + tuned,
                 )

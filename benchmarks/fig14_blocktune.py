@@ -46,8 +46,8 @@ def run(full: bool = False) -> None:
         record_source="smoke" if smoke() else "measured",
     )
 
-    def measure(block):
-        solver = MHDSolver(shape, strategy="swc", block=block)
+    def measure(cand):
+        solver = MHDSolver(shape, strategy="swc", block=cand.block)
         rhs = jax.jit(solver.rhs)
         return time_candidate(lambda: rhs(f0), warmup=1, iters=iters)
 

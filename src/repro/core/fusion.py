@@ -31,11 +31,20 @@ shard_map analogue of Astaroth's MPI halo exchange. With
 ``overlap=True`` the interior (halo-independent) points are computed
 from purely local data so XLA can overlap the collective-permute with
 interior FLOPs (the compute/communication overlap decomposition).
+
+``fuse_steps`` adds the temporal dimension to the fusion (the paper's
+headline strategy taken one level further): one kernel invocation
+advances ``fuse_steps`` time steps on a VMEM-resident block whose halo
+is widened to ``radius * fuse_steps``, so intermediate steps never
+write the field stack back to HBM — redundant halo compute traded for
+memory traffic (classic temporal blocking). ``fuse_steps="auto"``
+resolves the depth jointly with the block through the tuning
+subsystem's traffic-model-driven search.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Mapping, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +56,8 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 Phi = Callable[[Mapping[str, jnp.ndarray]], jnp.ndarray]
+# One callable (applied every fused step) or one per fused step.
+PhiLike = Union[Phi, tuple]
 
 STRATEGIES = ("hwc", "swc", "swc_stream")
 
@@ -56,7 +67,7 @@ class FusedStencilOp:
     """One fused update step over an (n_f, *spatial) field stack."""
 
     ops: OperatorSet
-    phi: Phi
+    phi: PhiLike
     n_out: int
     boundary_mode: str = "periodic"
     strategy: str = "hwc"
@@ -65,6 +76,11 @@ class FusedStencilOp:
     # eager miss, structural cost-model winner under jit tracing), or
     # None for the per-rank default.
     block: tuple[int, ...] | str | None = None
+    # Temporal fusion depth: one call advances this many time steps in
+    # ONE kernel (halo widened to radius·depth, intermediates VMEM-only).
+    # "auto" resolves (block, depth) jointly from the tuning subsystem's
+    # traffic-model search; requires strategy="swc" and block="auto".
+    fuse_steps: int | str = 1
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -82,6 +98,53 @@ class FusedStencilOp:
                 f"block must be a rank-length tuple, 'auto', or None, "
                 f"got {self.block!r}"
             )
+        if isinstance(self.fuse_steps, str):
+            if self.fuse_steps != "auto":
+                raise ValueError(
+                    f"fuse_steps must be an int >= 1 or 'auto', got "
+                    f"{self.fuse_steps!r}"
+                )
+            if self.strategy != "swc" or self.block != "auto":
+                raise ValueError(
+                    "fuse_steps='auto' resolves through the joint "
+                    "(block, depth) tuning search — it requires "
+                    "strategy='swc' and block='auto'"
+                )
+        elif self.fuse_steps < 1:
+            raise ValueError(
+                f"fuse_steps must be >= 1, got {self.fuse_steps}"
+            )
+        if self._depth_or_none() != 1:
+            if self.strategy == "swc_stream":
+                raise ValueError(
+                    "temporal fusion (fuse_steps > 1) is not supported "
+                    "by swc_stream — use strategy='swc'"
+                )
+            if self.boundary_mode != "periodic":
+                raise ValueError(
+                    "temporal fusion requires boundary_mode='periodic': "
+                    "intermediate in-kernel sweeps consume pre-padded "
+                    "ghost cells and never re-impose the boundary, "
+                    "which only composes exactly for the periodic wrap "
+                    f"(got {self.boundary_mode!r})"
+                )
+        if isinstance(self.phi, (tuple, list)):
+            depth = self._depth_or_none()
+            if depth is None:
+                raise ValueError(
+                    "a per-step phi sequence pins the fusion depth to "
+                    f"len(phi) = {len(self.phi)} — pass that as "
+                    "fuse_steps instead of 'auto'"
+                )
+            if len(self.phi) != depth:
+                raise ValueError(
+                    f"phi sequence has {len(self.phi)} entries for "
+                    f"fuse_steps={depth}"
+                )
+
+    def _depth_or_none(self) -> int | None:
+        """Concrete fusion depth, or None when it is tuned ('auto')."""
+        return None if self.fuse_steps == "auto" else int(self.fuse_steps)
 
     @property
     def radius_per_axis(self) -> tuple[int, ...]:
@@ -89,31 +152,79 @@ class FusedStencilOp:
 
     # -- single device ------------------------------------------------------
 
+    def resolved(
+        self, f: jnp.ndarray, aux: jnp.ndarray | None = None
+    ) -> "FusedStencilOp":
+        """An equivalent op with a concrete fusion depth.
+
+        A no-op unless ``fuse_steps="auto"``, in which case the tuning
+        subsystem resolves (block, depth) jointly for the *unpadded*
+        field stack ``f`` — measured on a cache miss when eager, the
+        traffic-model winner under jit tracing.
+        """
+        if self.fuse_steps != "auto":
+            return self
+        from repro.tuning.session import auto_fuse_nd
+
+        block, depth = auto_fuse_nd(
+            f, self.ops, self.phi, self.n_out, aux=aux,
+            strategy=self.strategy,
+        )
+        return dataclasses.replace(
+            self, block=tuple(block), fuse_steps=int(depth)
+        )
+
     def apply_padded(
         self, f_padded: jnp.ndarray, aux: jnp.ndarray | None = None
     ) -> jnp.ndarray:
-        """Apply to an already-padded field stack (ghost cells present).
+        """Apply to an already-padded field stack (ghost cells present:
+        ``radius * fuse_steps`` per axis — one radius per fused sweep).
 
-        ``aux`` (n_aux, *interior): extra point-wise inputs forwarded to
-        φ (fused axpy / RK carries — beyond-paper extension)."""
+        ``aux``: extra point-wise inputs forwarded to φ (fused axpy /
+        RK carries — beyond-paper extension); (n_aux, *interior) at
+        depth 1, padded by ``radius * (fuse_steps - 1)`` at depth > 1 so
+        intermediate sweeps see an aligned carry."""
+        depth = self._depth_or_none()
+        if depth is None:
+            raise ValueError(
+                "apply_padded needs a concrete fuse_steps (the ghost-"
+                "cell width depends on it) — resolve via "
+                "op.resolved(f)(f) or __call__"
+            )
         if self.strategy in ("swc", "swc_stream"):
             return kops.fused_stencil_nd(
                 f_padded, self.ops, self.phi, self.n_out, aux=aux,
                 strategy=self.strategy, block=self.block,
+                fuse_steps=depth,
             )
         # hwc — XLA owns on-chip residency (the paper's compiler-managed
         # caching regime).
-        return kref.fused_stencil(f_padded, self.ops, self.phi, aux=aux)
+        if depth == 1:
+            return kref.fused_stencil(
+                f_padded, self.ops, self.phi, aux=aux
+            )
+        return kref.fused_stencil_steps(
+            f_padded, self.ops, self.phi, depth, aux=aux
+        )
 
     def __call__(
         self, f: jnp.ndarray, aux: jnp.ndarray | None = None
     ) -> jnp.ndarray:
-        """ψ then φ(A·B): pad with the boundary function and apply."""
+        """ψ then φ(A·B): pad with the boundary function and apply —
+        advancing ``fuse_steps`` time steps per call."""
+        if self.fuse_steps == "auto":
+            return self.resolved(f, aux)(f, aux)
+        depth = int(self.fuse_steps)
         rads = self.radius_per_axis
         fp = boundary.pad(
-            f, rads, self.boundary_mode,
+            f, [r * depth for r in rads], self.boundary_mode,
             spatial_axes=range(1, f.ndim),
         )
+        if aux is not None and depth > 1:
+            aux = boundary.pad(
+                aux, [r * (depth - 1) for r in rads], self.boundary_mode,
+                spatial_axes=range(1, aux.ndim),
+            )
         return self.apply_padded(fp, aux=aux)
 
     # -- distributed --------------------------------------------------------
@@ -140,7 +251,20 @@ class FusedStencilOp:
         latency-hiding scheduler can overlap the collective-permute with
         interior FLOPs; the dependent edge slabs are computed from the
         exchanged array afterwards. Numerics are unchanged.
+
+        With ``fuse_steps > 1`` the exchanged halo widens to
+        ``radius * fuse_steps`` per sharded axis (and the carry ``aux``
+        is exchanged at ``radius * (fuse_steps - 1)``): one exchange
+        buys ``fuse_steps`` time steps, cutting ICI message count the
+        same way the kernel cuts HBM round trips. The overlap
+        decomposition currently applies at depth 1 only — deeper ops
+        fall back to plain exchange-then-apply.
         """
+        if self.fuse_steps == "auto":
+            return self.resolved(f_local, aux).apply_sharded(
+                f_local, mesh_axes, aux, overlap=overlap
+            )
+        depth = int(self.fuse_steps)
         n_spatial = f_local.ndim - 1
         if len(mesh_axes) != n_spatial:
             raise ValueError(
@@ -153,14 +277,20 @@ class FusedStencilOp:
                 "sharded stencils currently support periodic boundaries "
                 "(the paper's simulation setup)"
             )
-        if overlap:
+        if overlap and depth == 1:
             out = self._apply_sharded_overlap(f_local, mesh_axes, aux)
             if out is not None:
                 return out
+        spatial_axes = tuple(range(1, f_local.ndim))
         fp = exchange_halos_nd(
-            f_local, self.radius_per_axis, mesh_axes,
-            spatial_axes=tuple(range(1, f_local.ndim)),
+            f_local, [r * depth for r in self.radius_per_axis],
+            mesh_axes, spatial_axes=spatial_axes,
         )
+        if aux is not None and depth > 1:
+            aux = exchange_halos_nd(
+                aux, [r * (depth - 1) for r in self.radius_per_axis],
+                mesh_axes, spatial_axes=tuple(range(1, aux.ndim)),
+            )
         return self.apply_padded(fp, aux=aux)
 
     def _apply_sharded_overlap(
@@ -245,10 +375,27 @@ class FusedStencilOp:
 def integrate(
     op: FusedStencilOp, f0: jnp.ndarray, n_steps: int
 ) -> jnp.ndarray:
-    """Iterate f ← φ(A·B(ψ(f))) with lax control flow (paper Fig. 1)."""
+    """Iterate f ← φ(A·B(ψ(f))) for ``n_steps`` TIME steps with lax
+    control flow (paper Fig. 1).
+
+    With temporal fusion each scan iteration advances ``op.fuse_steps``
+    steps in one kernel; a remainder ``n_steps % fuse_steps`` is
+    finished with a shallower op so the step count is exact.
+    ``fuse_steps="auto"`` is resolved once, up front, against ``f0``.
+    """
+    op = op.resolved(f0)
+    depth = int(op.fuse_steps)
+    if depth > 1 and isinstance(op.phi, (tuple, list)):
+        raise ValueError(
+            "integrate() iterates one uniform map — per-step phi "
+            "sequences (RK substep fusion) are driven by their solver"
+        )
+    full, rem = divmod(n_steps, depth)
 
     def body(f, _):
         return op(f), None
 
-    out, _ = jax.lax.scan(body, f0, None, length=n_steps)
+    out, _ = jax.lax.scan(body, f0, None, length=full)
+    if rem:
+        out = dataclasses.replace(op, fuse_steps=rem)(out)
     return out

@@ -27,8 +27,18 @@ TP-sharded over `model` (÷M), FSDP additionally over `data`; activations
 are DP-sharded (÷D on tokens) with hidden dims TP-sharded where the rules
 shard them. Within ~2× of a real profile, which is what a roofline term
 needs.
+
+The second half of this module models *stencil* HBM traffic under
+temporal fusion (fuse_steps in-kernel time steps on halo-widened
+blocks): what one simulated time step moves through HBM as a function
+of (block, radii, depth). ``repro.tuning.costmodel`` scores its
+(block, fuse_steps) candidates through these exact functions, so the
+autotuner's temporal term and the reported traffic model cannot
+diverge.
 """
 from __future__ import annotations
+
+from typing import Sequence
 
 from repro.models.config import ModelConfig
 
@@ -136,3 +146,86 @@ def _decode_cache_bytes(
         b_chip * cfg.n_layers * cache_len * 2  # k and v
         * cfg.n_kv_heads * cfg.hd / kv_shard * 2  # bf16
     )
+
+
+# ---------------------------------------------------------------------------
+# Stencil temporal-fusion traffic (the fused-kernel bandwidth lever).
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def stencil_hbm_bytes_per_step(
+    domain: Sequence[int],
+    block: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    fuse_steps: int = 1,
+) -> float:
+    """Modeled HBM bytes moved per simulated TIME step.
+
+    One kernel launch stages, per block, the tile plus a halo widened to
+    ``radii * fuse_steps`` (reads), writes the interior tile once, and
+    advances ``fuse_steps`` steps — so the per-step traffic is the whole
+    launch divided by the depth. Depth 1 reduces to the classic
+    read-tile-plus-halo / write-tile model.
+    """
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    n_blocks, read_per_block, points = 1, n_f, 1
+    for n, t, r in zip(domain, block, radii):
+        n_blocks *= _ceil_div(n, t)
+        read_per_block *= t + 2 * r * fuse_steps
+        points *= n
+    read = n_blocks * read_per_block
+    write = n_out * points
+    return (read + write) * itemsize / fuse_steps
+
+
+def stencil_redundant_compute_fraction(
+    block: Sequence[int],
+    radii: Sequence[int],
+    fuse_steps: int = 1,
+) -> float:
+    """Extra stencil evaluations per useful output point under temporal
+    fusion: sweep ``s`` of ``S`` covers the tile plus a
+    ``radii * (S - 1 - s)`` margin (the valid region shrinks one radius
+    per sweep), so fused blocks recompute halo points the unfused
+    schedule would have read from HBM. Returns 0.0 at depth 1.
+    """
+    tile = 1
+    for t in block:
+        tile *= t
+    total = 0
+    for s in range(fuse_steps):
+        vol = 1
+        for t, r in zip(block, radii):
+            vol *= t + 2 * r * (fuse_steps - 1 - s)
+        total += vol
+    return total / (fuse_steps * tile) - 1.0
+
+
+def stencil_traffic_reduction(
+    domain: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    *,
+    block_base: Sequence[int],
+    block_fused: Sequence[int],
+    fuse_steps: int,
+) -> float:
+    """Modeled per-step HBM-traffic reduction of a fused configuration
+    over its depth-1 baseline (>1 means the fused plan moves less)."""
+    base = stencil_hbm_bytes_per_step(
+        domain, block_base, radii, n_f, n_out, itemsize, 1
+    )
+    fused = stencil_hbm_bytes_per_step(
+        domain, block_fused, radii, n_f, n_out, itemsize, fuse_steps
+    )
+    return base / fused

@@ -16,6 +16,11 @@ Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
   shifted-slice FMAs. ``plan.unroll > 1`` additionally computes several
   adjacent x sub-tiles per grid step from one staged window — the
   paper's element-wise unrolling, generalized to any rank.
+  ``plan.fuse_steps > 1`` selects the temporal-fusion kernel instead:
+  the staged halo widens to ``r·fuse_steps`` and the fused op is applied
+  that many times on the VMEM-resident block (valid region shrinking by
+  one radius per sweep), so intermediate time steps never round-trip
+  through HBM.
 * ``swc_stream`` — rank 3 only: the (y, x) tile is fixed per grid step
   and the kernel streams z-chunks through an explicitly managed VMEM
   working buffer with async-DMA prefetch and carried halo planes (see
@@ -88,6 +93,45 @@ def _kernel_pipelined(
             o_ref[..., e * tx : (e + 1) * tx] = val
 
 
+def _kernel_temporal(
+    f_ref, *rest, ops, radii, tile, phis, n_f, has_aux
+):
+    """Temporal-fusion kernel, any rank: apply the fused op
+    ``len(phis)`` times on one VMEM-resident block staged with a
+    ``radii * fuse_steps`` halo. Each sweep's valid region shrinks by
+    one radius per axis; intermediate field stacks (and carries) stay
+    on-chip — only the final tile is written back to HBM.
+
+    ``rest`` is (aux_ref, o_ref) when the plan carries aux inputs, else
+    (o_ref,). The staged aux window is ``tile + 2r(S-1)`` so every
+    intermediate sweep sees a point-wise-aligned carry.
+    """
+    aux_ref, o_ref = rest if has_aux else (None, rest[0])
+    n_steps = len(phis)
+    cur = f_ref[...]
+    cur_aux = aux_ref[...] if has_aux else None
+    for s, phi in enumerate(phis):  # static: unrolled at trace time
+        margin = n_steps - 1 - s  # sweeps remaining after this one
+        sub_tile = tuple(
+            t + 2 * r * margin for t, r in zip(tile, radii)
+        )
+        derivs = _block_derivs(cur, ops, radii, sub_tile)
+        val = phi(derivs, cur_aux) if has_aux else phi(derivs)
+        if margin == 0:
+            o_ref[...] = val
+        else:
+            cur = val[:n_f]
+            if has_aux:
+                n_aux = cur_aux.shape[0]
+                cur_aux = val[n_f : n_f + n_aux][
+                    (slice(None),)
+                    + tuple(
+                        slice(r, r + t + 2 * r * (margin - 1))
+                        for t, r in zip(tile, radii)
+                    )
+                ]
+
+
 def _grid_and_maps(plan: StencilPlan):
     """Grid extents and (input, tile-indexed) index maps per rank.
 
@@ -131,23 +175,36 @@ def fused_stencil_pallas(
 ) -> jnp.ndarray:
     """Emit and invoke the fused φ(A·B) kernel described by ``plan``.
 
-    ``f_padded``: (n_f, *(n_a + 2r_a)) with radii from the plan. ``aux``
-    (n_aux, *interior): extra point-wise inputs staged as halo-free
-    center tiles and passed as phi's second argument — fuses point-wise
-    follow-up work (e.g. the RK axpy) into the stencil kernel.
-    Returns (n_out, *interior).
+    ``f_padded``: (n_f, *(n_a + 2r_a·fuse_steps)) with radii from the
+    plan. ``aux`` — extra point-wise inputs passed as phi's second
+    argument, fusing point-wise follow-up work (e.g. the RK axpy) into
+    the stencil kernel: (n_aux, *interior) at depth 1 (staged as
+    halo-free center tiles), (n_aux, *(interior + 2r(S-1))) at temporal
+    depth S > 1 (staged as overlapping windows so intermediate sweeps
+    see an aligned carry). ``phi`` may be a sequence of ``fuse_steps``
+    callables (one per fused sweep). Returns (n_out, *interior).
     """
     if (aux is not None) != bool(plan.n_aux):
         raise ValueError("aux operand does not match plan.n_aux")
+    phis = (
+        tuple(phi)
+        if isinstance(phi, (tuple, list))
+        else (phi,) * plan.fuse_steps
+    )
+    if len(phis) != plan.fuse_steps:
+        raise ValueError(
+            f"got {len(phis)} phi callables for plan with "
+            f"fuse_steps={plan.fuse_steps}"
+        )
     if plan.strategy == "swc_stream":
         return _fused_stream(
-            f_padded, ops, phi, plan, interpret=interpret
+            f_padded, ops, phis[0], plan, interpret=interpret
         )
 
     radii, tile = plan.radii, plan.block
     window = tuple(
-        (plan.x_step if a == plan.rank - 1 else tile[a]) + 2 * radii[a]
-        for a in range(plan.rank)
+        (plan.x_step if a == plan.rank - 1 else tile[a]) + 2 * h
+        for a, h in enumerate(plan.halo)
     )
     out_tile = plan.block[:-1] + (plan.x_step,)
     grid, in_map, tile_map = _grid_and_maps(plan)
@@ -160,12 +217,33 @@ def fused_stencil_pallas(
     ]
     operands = [f_padded]
     if aux is not None:
-        in_specs.append(pl.BlockSpec((plan.n_aux,) + out_tile, tile_map))
+        if plan.fuse_steps == 1:
+            in_specs.append(
+                pl.BlockSpec((plan.n_aux,) + out_tile, tile_map)
+            )
+        else:
+            aux_window = tuple(
+                t + 2 * r * (plan.fuse_steps - 1)
+                for t, r in zip(tile, radii)
+            )
+            in_specs.append(
+                element_window_spec(
+                    (plan.n_aux,) + aux_window,
+                    in_map,
+                    window_dims=tuple(range(1, plan.rank + 1)),
+                )
+            )
         operands.append(aux)
-    kernel = functools.partial(
-        _kernel_pipelined, ops=ops, radii=radii, tile=tile, phi=phi,
-        unroll=plan.unroll, has_aux=aux is not None,
-    )
+    if plan.fuse_steps > 1:
+        kernel = functools.partial(
+            _kernel_temporal, ops=ops, radii=radii, tile=tile,
+            phis=phis, n_f=plan.n_f, has_aux=aux is not None,
+        )
+    else:
+        kernel = functools.partial(
+            _kernel_pipelined, ops=ops, radii=radii, tile=tile,
+            phi=phis[0], unroll=plan.unroll, has_aux=aux is not None,
+        )
     return pl.pallas_call(
         kernel,
         grid=grid,

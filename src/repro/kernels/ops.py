@@ -112,6 +112,7 @@ def fused_stencil_nd(
     strategy: str = "swc",
     block: tuple[int, ...] | str | None = None,
     unroll: int = 1,
+    fuse_steps: int = 1,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Fused φ(A·B) over a padded (n_f, *spatial) domain of rank 1-3
@@ -124,23 +125,33 @@ def fused_stencil_nd(
     non-divisible extents shrink the tile to the largest divisor) or
     ``"auto"``, which consults the persistent tuning cache (measuring on
     a miss when eager) — for every rank, through the same cache.
+
+    ``fuse_steps`` is the temporal-fusion depth: ``f_padded`` must be
+    padded by ``radius * fuse_steps`` (and ``aux``, if any, by
+    ``radius * (fuse_steps - 1)``), the op is applied that many times
+    inside one kernel, and ``phi`` may be a sequence of per-step
+    callables. One call advances ``fuse_steps`` time steps.
     """
     if interpret is None:
         interpret = _default_interpret()
     if strategy == "hwc":
-        return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
+        if fuse_steps == 1:
+            return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
+        return _ref.fused_stencil_steps(
+            f_padded, ops, phi, fuse_steps, aux=aux
+        )
     if block == "auto":
         from repro.tuning.session import auto_block_nd
 
         block = auto_block_nd(
             f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
-            unroll=unroll, interpret=interpret,
+            unroll=unroll, fuse_steps=fuse_steps, interpret=interpret,
         )
     plan = plan_stencil(
         ops, f_padded.shape, n_out, strategy=strategy, block=block,
         dtype=str(f_padded.dtype),
         n_aux=aux.shape[0] if aux is not None else 0,
-        unroll=unroll,
+        unroll=unroll, fuse_steps=fuse_steps,
     )
     return fused_stencil_pallas(
         f_padded, ops, phi, plan, aux=aux, interpret=interpret

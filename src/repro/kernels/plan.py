@@ -53,6 +53,15 @@ class StencilPlan:
     ``unroll`` adjacent x sub-tiles per grid step from one staged input
     window (the paper's element-wise unrolling, generalized), so the
     effective x extent per step is ``block[-1] * unroll``.
+
+    ``fuse_steps`` is the temporal-fusion depth: the fused op is applied
+    that many times inside ONE kernel invocation on a VMEM-resident
+    block whose staged halo is widened to ``radii * fuse_steps`` — the
+    valid region shrinks by one radius per sweep and intermediate steps
+    never touch HBM (classic temporal blocking: redundant halo compute
+    traded for memory traffic). Depth > 1 requires the op to be a
+    self-map, ``n_out == n_f + n_aux``, so each sweep's output provides
+    the next sweep's field stack (rows 0..n_f) and carry (the rest).
     """
 
     rank: int
@@ -65,6 +74,7 @@ class StencilPlan:
     dtype: str
     n_aux: int = 0
     unroll: int = 1  # element-wise unroll along x
+    fuse_steps: int = 1  # temporal fusion depth (in-kernel time steps)
 
     def __post_init__(self):
         if self.rank not in (1, 2, 3):
@@ -94,6 +104,30 @@ class StencilPlan:
             raise ValueError(f"unroll must be >= 1, got {self.unroll}")
         if self.strategy == "swc_stream" and self.unroll != 1:
             raise ValueError("swc_stream does not support unroll > 1")
+        if self.fuse_steps < 1:
+            raise ValueError(
+                f"fuse_steps must be >= 1, got {self.fuse_steps}"
+            )
+        if self.fuse_steps > 1:
+            if self.strategy == "swc_stream":
+                raise ValueError(
+                    "temporal fusion (fuse_steps > 1) requires "
+                    "strategy='swc' — the z-streaming kernel carries "
+                    "single-step halo planes"
+                )
+            if self.unroll != 1:
+                raise ValueError(
+                    "temporal fusion composes with the staged halo "
+                    "window, not element-wise unrolling — use unroll=1 "
+                    "with fuse_steps > 1"
+                )
+            if self.n_out != self.n_f + self.n_aux:
+                raise ValueError(
+                    "fuse_steps > 1 requires a self-map op with "
+                    f"n_out == n_f + n_aux (got n_out={self.n_out}, "
+                    f"n_f={self.n_f}, n_aux={self.n_aux}) so each "
+                    "in-kernel sweep can feed the next"
+                )
         step = self.x_step
         for a in range(self.rank):
             t = self.block[a] if a < self.rank - 1 else step
@@ -107,6 +141,11 @@ class StencilPlan:
     def x_step(self) -> int:
         """Output extent covered along x per grid step."""
         return self.block[-1] * self.unroll
+
+    @property
+    def halo(self) -> tuple[int, ...]:
+        """Staged halo width per axis: one radius per fused sweep."""
+        return tuple(r * self.fuse_steps for r in self.radii)
 
     @property
     def grid(self) -> tuple[int, ...]:
@@ -123,11 +162,15 @@ class StencilPlan:
 
     @property
     def strategy_id(self) -> str:
-        """Strategy component of the cache key; the unroll factor is
-        part of the codegen configuration, so it joins the key."""
-        if self.unroll == 1:
-            return self.strategy
-        return f"{self.strategy}:u{self.unroll}"
+        """Strategy component of the cache key; unroll and temporal
+        fusion depth are codegen configuration, so they join the key —
+        depth-1 and depth-2 plans cache separately."""
+        sid = self.strategy
+        if self.unroll != 1:
+            sid += f":u{self.unroll}"
+        if self.fuse_steps != 1:
+            sid += f":f{self.fuse_steps}"
+        return sid
 
     def tuning_key(self, backend: str | None = None):
         """The persistent-cache key for this plan's problem identity
@@ -156,31 +199,37 @@ def plan_stencil(
     dtype: str = "float32",
     n_aux: int = 0,
     unroll: int = 1,
+    fuse_steps: int = 1,
 ) -> StencilPlan:
     """Lower a fused-stencil problem to a :class:`StencilPlan`.
 
     ``padded_shape`` is the (n_f, *spatial_padded) operand shape (spatial
-    axes padded by ``ops.radius_per_axis()``). ``block`` may be ``None``
-    (per-rank default), an int (rank-1 shorthand), or a tuple; a tuple
-    longer than the rank keeps its trailing entries (x-last convention,
-    so a 3-D default like (8, 8, 128) lowers to (8, 128) at rank 2), and
-    each axis is clamped to the largest divisor of the interior extent —
-    non-block-divisible domains shrink the tile instead of failing.
+    axes padded by ``ops.radius_per_axis() * fuse_steps`` — temporal
+    fusion consumes one radius of ghost cells per in-kernel sweep).
+    ``block`` may be ``None`` (per-rank default), an int (rank-1
+    shorthand), or a tuple; a tuple longer than the rank keeps its
+    trailing entries (x-last convention, so a 3-D default like
+    (8, 8, 128) lowers to (8, 128) at rank 2), and each axis is clamped
+    to the largest divisor of the interior extent — non-block-divisible
+    domains shrink the tile instead of failing.
     """
     rank = ops.ndim
     radii = ops.radius_per_axis()
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
     if len(padded_shape) != rank + 1:
         raise ValueError(
             f"padded operand must be (n_f, *spatial) with {rank} spatial "
             f"dims, got shape {tuple(padded_shape)}"
         )
     interior = tuple(
-        padded_shape[1 + a] - 2 * radii[a] for a in range(rank)
+        padded_shape[1 + a] - 2 * radii[a] * fuse_steps
+        for a in range(rank)
     )
     if any(n <= 0 for n in interior):
         raise ValueError(
             f"padded shape {tuple(padded_shape)} leaves no interior for "
-            f"radii {radii}"
+            f"radii {radii} at fuse_steps={fuse_steps}"
         )
 
     if block is None:
@@ -221,4 +270,5 @@ def plan_stencil(
         dtype=str(dtype),
         n_aux=int(n_aux),
         unroll=int(unroll),
+        fuse_steps=int(fuse_steps),
     )

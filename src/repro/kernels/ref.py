@@ -75,6 +75,54 @@ def fused_stencil(
     return phi(derivs, aux)
 
 
+def fused_stencil_steps(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi,
+    n_steps: int,
+    aux: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Sequential reference for temporal fusion: apply the fused op
+    ``n_steps`` times, shrinking the valid region by one radius per
+    application (the oracle the halo-widened multi-step kernel must
+    match bit-for-tolerance).
+
+    ``f_padded`` is padded by ``radius * n_steps`` per axis; ``aux`` (if
+    given) by ``radius * (n_steps - 1)``. ``phi`` is one callable (same
+    map every step) or a sequence of ``n_steps`` callables (e.g. RK
+    substeps with different coefficients). Steps before the last must be
+    self-maps — rows 0..n_f of the output feed the next step's field
+    stack, the following n_aux rows the next carry. Returns
+    (n_out, *interior).
+    """
+    phis = (
+        tuple(phi) if isinstance(phi, (tuple, list)) else (phi,) * n_steps
+    )
+    if len(phis) != n_steps:
+        raise ValueError(
+            f"got {len(phis)} phi callables for {n_steps} fused steps"
+        )
+    rad = ops.radius_per_axis()
+    n_f = f_padded.shape[0]
+    cur, cur_aux = f_padded, aux
+    for s, phi_s in enumerate(phis):
+        out = fused_stencil(cur, ops, phi_s, aux=cur_aux)
+        if s == n_steps - 1:
+            return out
+        cur = out[:n_f]
+        if cur_aux is not None:
+            n_aux = cur_aux.shape[0]
+            carry = out[n_f : n_f + n_aux]
+            cur_aux = carry[
+                (slice(None),)
+                + tuple(
+                    slice(r, carry.shape[1 + a] - r) if r else slice(None)
+                    for a, r in enumerate(rad)
+                )
+            ]
+    return out  # unreachable (n_steps >= 1); keeps type checkers happy
+
+
 def conv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """Depthwise causal 1-D convolution (mamba2 frontend stencil).
 

@@ -61,11 +61,15 @@ class DiffusionProblem:
         self,
         strategy: str = "hwc",
         block: tuple[int, ...] | str | None = None,
+        fuse_steps: int | str = 1,
     ) -> FusedStencilOp:
         """One forward-Euler step as a fused op. ``strategy="swc"``
         lowers through the rank-generic engine at any dimensionality
         (1-D/2-D/3-D); ``block`` is a rank-length tile, ``"auto"`` for
         the persistent tuning cache, or None for the per-rank default.
+        ``fuse_steps`` is the temporal-fusion depth (each op call then
+        advances that many Euler steps in one kernel); ``"auto"``
+        resolves block and depth jointly from the traffic model.
         """
         spec = dataclasses.replace(self.merged_stencil(), name="step")  # type: ignore[arg-type]
         ops = OperatorSet((spec,))
@@ -76,6 +80,7 @@ class DiffusionProblem:
             boundary_mode="periodic",
             strategy=strategy,
             block=block,
+            fuse_steps=fuse_steps,
         )
 
     def init_field(self, seed: int = 0, amplitude: float = 1e-5) -> jnp.ndarray:
@@ -127,16 +132,19 @@ def simulate(
     *,
     strategy: str = "hwc",
     block: tuple[int, ...] | str | None = None,
+    fuse_steps: int | str = 1,
 ) -> jnp.ndarray:
-    """Run ``n_steps`` of forward-Euler diffusion with the fused engine."""
-    op = problem.step_op(strategy, block)
+    """Run ``n_steps`` of forward-Euler diffusion with the fused engine.
+
+    ``fuse_steps > 1`` advances that many steps per kernel launch
+    (temporal fusion; a remainder is finished at shallower depth so the
+    step count stays exact)."""
+    from repro.core.fusion import integrate
+
+    op = problem.step_op(strategy, block, fuse_steps)
 
     @jax.jit
     def run(f):
-        def body(fc, _):
-            return op(fc), None
-
-        out, _ = jax.lax.scan(body, f, None, length=n_steps)
-        return out
+        return integrate(op, f, n_steps)
 
     return run(f0)

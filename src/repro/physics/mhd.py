@@ -234,6 +234,12 @@ class MHDSolver:
     strategy: str = "hwc"
     block: tuple[int, int, int] | str = (8, 8, 128)  # or "auto"
     fuse_rk_axpy: bool = False  # beyond-paper: fold the RK update into φ
+    # Temporal fusion of the RK3 substeps: substeps 1+2 run as ONE
+    # depth-2 kernel (per-substep φ with the w carry threaded through
+    # VMEM), substep 3 as a depth-1 fused-axpy kernel — two launches
+    # per RK3 step instead of three, one fewer full-stack HBM round
+    # trip. Implies the fused-axpy formulation.
+    fuse_rk_pairs: bool = False
 
     @property
     def spacing(self) -> tuple[float, float, float]:
@@ -253,9 +259,11 @@ class MHDSolver:
             block=self.block,
         )
 
-    def _fused_substep_op(self, alpha: float, beta: float, dt) -> FusedStencilOp:
-        """One kernel computing w' = αw + Δt·RHS(f) and f' = f + βw'
-        (aux = w): the fused-axpy variant. Output rows 0..7 = f', 8..15 = w'."""
+    def _substep_phi(self, alpha: float, beta: float, dt):
+        """φ for one fused-axpy RK substep: w' = αw + Δt·RHS(f),
+        f' = f + βw' (aux = w). Output rows 0..7 = f', 8..15 = w' — a
+        self-map over (f, w), which is exactly what temporal fusion
+        needs to chain substeps in one kernel."""
         rhs_phi = mhd_rhs_phi(self.params)
 
         def phi(d, aux):
@@ -266,13 +274,34 @@ class MHDSolver:
             f_new = d["val"] + jnp.asarray(beta, rhs.dtype) * w_new
             return jnp.concatenate([f_new, w_new])
 
+        return phi
+
+    def _fused_substep_op(self, alpha: float, beta: float, dt) -> FusedStencilOp:
+        """One kernel running one fused-axpy RK substep."""
         return FusedStencilOp(
             ops=self.operator_set,
-            phi=phi,
+            phi=self._substep_phi(alpha, beta, dt),
             n_out=2 * N_FIELDS,
             boundary_mode="periodic",
             strategy=self.strategy,
             block=self.block,
+        )
+
+    def _fused_pair_op(self, dt) -> FusedStencilOp:
+        """RK3 substeps 1+2 as ONE temporal-depth-2 kernel: per-substep
+        φs applied back to back on a halo-widened VMEM block, the (f, w)
+        intermediate never touching HBM."""
+        return FusedStencilOp(
+            ops=self.operator_set,
+            phi=(
+                self._substep_phi(RK3_ALPHA[0], RK3_BETA[0], dt),
+                self._substep_phi(RK3_ALPHA[1], RK3_BETA[1], dt),
+            ),
+            n_out=2 * N_FIELDS,
+            boundary_mode="periodic",
+            strategy=self.strategy,
+            block=self.block,
+            fuse_steps=2,
         )
 
     def rhs(self, f: jnp.ndarray) -> jnp.ndarray:
@@ -280,7 +309,16 @@ class MHDSolver:
         return self.rhs_op()(f)
 
     def step(self, f: jnp.ndarray, dt: float) -> jnp.ndarray:
-        """One full RK3 step (three fused substeps — paper Sec. 3.3)."""
+        """One full RK3 step (three fused substeps — paper Sec. 3.3;
+        two kernel launches with ``fuse_rk_pairs``)."""
+        if self.fuse_rk_pairs:
+            w = jnp.zeros_like(f)
+            out = self._fused_pair_op(dt)(f, aux=w)
+            f, w = out[:N_FIELDS], out[N_FIELDS:]
+            out = self._fused_substep_op(
+                RK3_ALPHA[2], RK3_BETA[2], dt
+            )(f, aux=w)
+            return out[:N_FIELDS]
         if self.fuse_rk_axpy:
             w = jnp.zeros_like(f)
             for a, b in zip(RK3_ALPHA, RK3_BETA):

@@ -45,6 +45,7 @@ from repro.tuning.session import (  # noqa: F401
     auto_block_conv1d,
     auto_block_nd,
     auto_block_xcorr1d,
+    auto_fuse_nd,
     default_session,
     enable_auto,
     fused3d_candidates,

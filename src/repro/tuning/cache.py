@@ -85,14 +85,17 @@ class TuningKey:
 
 @dataclasses.dataclass
 class TuningRecord:
-    """One tuning outcome: the winning block plus the full timing table
-    (µs per call, keyed by the block's string form) for inspection."""
+    """One tuning outcome: the winning block (plus, for joint
+    block/depth searches, the winning temporal-fusion depth) and the
+    full timing table (µs per call, keyed by the block's string form)
+    for inspection."""
 
     block: Block
     timings_us: dict[str, float]
     source: str  # "measured" | "model" | "fallback"
     schema: int = SCHEMA_VERSION
     created: float = 0.0  # unix timestamp
+    fuse_steps: int = 1  # winning temporal depth (1 for pure-block keys)
 
     def to_json(self) -> dict:
         blk = list(self.block) if isinstance(self.block, tuple) else self.block
@@ -102,6 +105,7 @@ class TuningRecord:
             "source": self.source,
             "schema": self.schema,
             "created": self.created,
+            "fuse_steps": self.fuse_steps,
         }
 
     @classmethod
@@ -115,6 +119,7 @@ class TuningRecord:
             source=d.get("source", "measured"),
             schema=int(d.get("schema", -1)),
             created=float(d.get("created", 0.0)),
+            fuse_steps=int(d.get("fuse_steps", 1)),
         )
 
 

@@ -57,9 +57,16 @@ def _show_records(records) -> None:
     for key in sorted(records):
         rec = records[key]
         print(f"\n{key}")
-        print(f"  best block: {format_block(rec.block)}  [{rec.source}]")
+        depth = f" @f{rec.fuse_steps}" if rec.fuse_steps != 1 else ""
+        print(
+            f"  best block: {format_block(rec.block)}{depth}  "
+            f"[{rec.source}]"
+        )
+        winner = format_block(rec.block) + (
+            f"@f{rec.fuse_steps}" if rec.fuse_steps != 1 else ""
+        )
         for blk, us in sorted(rec.timings_us.items(), key=lambda kv: kv[1]):
-            mark = " <-- winner" if blk == format_block(rec.block) else ""
+            mark = " <-- winner" if blk == winner else ""
             print(f"    {blk:>16s}  {us:12.1f} us{mark}")
 
 

@@ -20,11 +20,17 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from typing import Callable, Iterable, Sequence
 
 import jax
 import numpy as np
+
+from repro.core.trafficmodel import (
+    stencil_hbm_bytes_per_step,
+    stencil_redundant_compute_fraction,
+)
 
 # Conservative per-core VMEM budget (bytes). v4/v5 expose ~16 MiB per
 # core to Pallas; we leave headroom for the output block + spills.
@@ -39,6 +45,15 @@ class Candidate:
     vmem_bytes: int
     halo_overhead: float  # redundant-fetch fraction vs perfect reuse
     score: float  # structural cost-model score (lower = better)
+    fuse_steps: int = 1  # temporal fusion depth of this candidate
+
+
+# Weight of redundant halo *compute* against saved HBM traffic in the
+# temporal score. Stencils are bandwidth-bound on both paper targets
+# (and on TPU: ~1 FLOP/byte stencil intensity vs ~100 machine balance),
+# so recomputed halo points cost far less than re-fetched ones; the
+# weight is the modeled compute-time share of a balanced fused kernel.
+TEMPORAL_COMPUTE_WEIGHT = 0.15
 
 
 def vmem_working_set(
@@ -47,21 +62,43 @@ def vmem_working_set(
     n_f: int,
     n_out: int,
     itemsize: int,
+    fuse_steps: int = 1,
 ) -> int:
-    """VMEM footprint of one pipelined block, any rank."""
+    """VMEM footprint of one pipelined block, any rank. Temporal fusion
+    widens the staged window to ``radii * fuse_steps`` and holds one
+    intermediate field generation on-chip between sweeps."""
     inp = n_f
+    mid = n_f if fuse_steps > 1 else 0
     out = n_out
     for t, r in zip(block, radii):
-        inp *= t + 2 * r
+        inp *= t + 2 * r * fuse_steps
+        mid *= t + 2 * r * (fuse_steps - 1)
         out *= t
     # Pallas double-buffers pipelined blocks: 2x input.
-    return (2 * inp + out) * itemsize
+    return (2 * inp + mid + out) * itemsize
 
 
-def halo_overhead(block: Sequence[int], radii: Sequence[int]) -> float:
+def halo_overhead(
+    block: Sequence[int],
+    radii: Sequence[int],
+    fuse_steps: int = 1,
+) -> float:
+    """Redundant-fetch fraction of one staged block vs perfect reuse.
+
+    Guard (tiny blocks × anisotropic radii, fused depths only): when a
+    fused sweep's valid region — which shrinks by one radius per step —
+    would hit zero/negative interior volume on some axis
+    (``t <= 2·r·fuse_steps`` with ``fuse_steps > 1``), the
+    configuration is all overhead, so the score is ``inf`` and
+    enumeration excludes the candidate instead of ranking it on a
+    misleading finite value. At depth 1 nothing shrinks, so small tiles
+    keep their (finite, merely large) overhead.
+    """
     fetched, useful = 1, 1
     for t, r in zip(block, radii):
-        fetched *= t + 2 * r
+        if fuse_steps > 1 and t <= 2 * r * fuse_steps:
+            return math.inf
+        fetched *= t + 2 * r * fuse_steps
         useful *= t
     return fetched / useful - 1.0
 
@@ -75,41 +112,65 @@ def enumerate_candidates_nd(
     *,
     vmem_budget: int = VMEM_BUDGET,
     axis_options: Sequence[Sequence[int]] | None = None,
+    fuse_steps_options: Sequence[int] = (1,),
 ) -> list[Candidate]:
-    """Generate, filter (divisibility + VMEM), and rank block shapes for
-    a rank-1/2/3 domain (the planner's search space — blocks are listed
-    in axis order, x last). ``axis_options`` overrides the per-axis tile
-    bases (same order)."""
+    """Generate, filter (divisibility + VMEM + the tiny-block guard),
+    and rank (block, fuse_steps) configurations for a rank-1/2/3 domain
+    (the planner's search space — blocks are listed in axis order, x
+    last). ``axis_options`` overrides the per-axis tile bases (same
+    order); ``fuse_steps_options`` widens the sweep to temporal fusion
+    depths, scored jointly with the block shape.
+
+    The score is a roofline-flavored sum of the modeled per-step HBM
+    traffic (via ``core.trafficmodel.stencil_hbm_bytes_per_step``,
+    normalized to the compulsory read+write of the interior) and the
+    weighted redundant-halo compute a fused depth re-evaluates, with
+    mild penalties for lane-misaligned x tiles, very small z tiles at
+    rank 3 (pipeline bubble per block), and — at rank 1, where the
+    grid-step count is the only parallel axis — short blocks that don't
+    amortize the per-step pipeline overhead. Lower is better.
+    """
     domain = tuple(domain)
     rank = len(domain)
     if axis_options is None:
         axis_options = axis_tile_options(domain)
+    points = 1
+    for n in domain:
+        points *= n
+    ideal_bytes = (n_f + n_out) * points * itemsize  # compulsory traffic
     out: list[Candidate] = []
-    for raw in itertools.product(*axis_options):
-        blk = []
-        ok = True
-        for n, t in zip(domain, raw):
-            if n % t and t != n:
-                ok = False
-                break
-            blk.append(min(t, n))
-        if not ok:
-            continue
-        blk = tuple(blk)
-        vm = vmem_working_set(blk, radii, n_f, n_out, itemsize)
-        if vm > vmem_budget:
-            continue  # the "failed launch" discard
-        ho = halo_overhead(blk, radii)
-        # Structural score: effective HBM traffic multiplier, with mild
-        # penalties for lane-misaligned x tiles, very small z tiles at
-        # rank 3 (pipeline bubble per block), and — at rank 1, where the
-        # grid-step count is the only parallel axis — short blocks that
-        # don't amortize the per-step pipeline overhead.
-        align_pen = 0.0 if blk[-1] % LANE == 0 else 0.15
-        bubble_pen = 0.05 if rank == 3 and blk[0] < 4 else 0.0
-        step_pen = LANE / blk[-1] if rank == 1 else 0.0
-        score = (1.0 + ho) * (1.0 + align_pen + bubble_pen + step_pen)
-        out.append(Candidate(blk, vm, ho, score))
+    for fuse in fuse_steps_options:
+        for raw in itertools.product(*axis_options):
+            blk = []
+            ok = True
+            for n, t in zip(domain, raw):
+                if n % t and t != n:
+                    ok = False
+                    break
+                blk.append(min(t, n))
+            if not ok:
+                continue
+            blk = tuple(blk)
+            ho = halo_overhead(blk, radii, fuse)
+            if not math.isfinite(ho):
+                continue  # tile swallowed by its widened halo
+            vm = vmem_working_set(blk, radii, n_f, n_out, itemsize, fuse)
+            if vm > vmem_budget:
+                continue  # the "failed launch" discard
+            traffic = stencil_hbm_bytes_per_step(
+                domain, blk, radii, n_f, n_out, itemsize, fuse
+            ) / ideal_bytes
+            redundancy = stencil_redundant_compute_fraction(
+                blk, radii, fuse
+            )
+            align_pen = 0.0 if blk[-1] % LANE == 0 else 0.15
+            bubble_pen = 0.05 if rank == 3 and blk[0] < 4 else 0.0
+            step_pen = LANE / blk[-1] if rank == 1 else 0.0
+            score = (
+                traffic * (1.0 + align_pen + bubble_pen + step_pen)
+                + TEMPORAL_COMPUTE_WEIGHT * redundancy
+            )
+            out.append(Candidate(blk, vm, ho, score, fuse))
     out.sort(key=lambda c: c.score)
     return out
 

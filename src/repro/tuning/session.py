@@ -75,9 +75,11 @@ class TuningSession:
         """Resolve ``key``: cache-hit fast path, else rank/measure/record.
 
         ``candidates`` are structurally ranked (best first) and must each
-        expose a ``.block`` attribute. ``measure(block) -> seconds`` may
-        raise to signal a discarded launch; ``None`` (e.g. under tracing)
-        selects the structural winner without hardware.
+        expose a ``.block`` attribute (and optionally ``.fuse_steps``
+        for joint block/temporal-depth searches).
+        ``measure(candidate) -> seconds`` may raise to signal a
+        discarded launch; ``None`` (e.g. under tracing) selects the
+        structural winner without hardware.
         """
         if not force:
             hit = self.cache.get(key)
@@ -98,24 +100,34 @@ class TuningSession:
             best: tuple[float, Any] | None = None
             for cand in list(candidates)[: self.top_k]:
                 try:
-                    t = measure(cand.block)
+                    t = measure(cand)
                 except Exception:
                     continue  # the paper's discarded launch (not counted)
                 MEASURE_COUNT += 1
-                timings[format_block(cand.block)] = t * 1e6
+                timings[_timing_label(cand)] = t * 1e6
                 if best is None or t < best[0]:
                     best = (t, cand)
             if best is not None:
                 record = TuningRecord(
                     block=best[1].block, timings_us=timings,
                     source=self.record_source,
+                    fuse_steps=getattr(best[1], "fuse_steps", 1),
                 )
         if record is None:  # no measure fn, or every candidate discarded
             record = TuningRecord(
-                block=candidates[0].block, timings_us={}, source="model"
+                block=candidates[0].block, timings_us={}, source="model",
+                fuse_steps=getattr(candidates[0], "fuse_steps", 1),
             )
         self.cache.put(key, record)
         return record
+
+
+def _timing_label(cand: Any) -> str:
+    """Timing-table key for one candidate: the block, suffixed with the
+    temporal depth when a joint search mixes depths."""
+    label = format_block(cand.block)
+    fuse = getattr(cand, "fuse_steps", 1)
+    return label if fuse == 1 else f"{label}@f{fuse}"
 
 
 # One process-wide session so all `block="auto"` call sites share a
@@ -152,12 +164,25 @@ def fused_nd_key(
     strategy: str,
     backend: str | None = None,
     unroll: int = 1,
+    fuse_steps: int | str = 1,
 ) -> TuningKey:
-    """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``)."""
+    """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``).
+
+    ``fuse_steps`` joins the strategy id like the plan's
+    ``strategy_id`` does — depth-1 and depth-2 problems cache
+    separately; the joint block/depth search keys as ``:fauto``.
+    """
     rank = len(domain)
+    sid = strategy
+    if unroll != 1:
+        sid += f":u{unroll}"
+    if fuse_steps == "auto":
+        sid += ":fauto"
+    elif fuse_steps != 1:
+        sid += f":f{fuse_steps}"
     return TuningKey(
         kernel=f"fused_stencil{rank}d",
-        strategy=strategy if unroll == 1 else f"{strategy}:u{unroll}",
+        strategy=sid,
         domain=tuple(domain),
         radii=tuple(radii),
         n_f=n_f,
@@ -187,18 +212,22 @@ def fused_nd_candidates(
     itemsize: int,
     *,
     vmem_budget: int = VMEM_BUDGET,
+    fuse_steps_options: Sequence[int] = (1,),
 ) -> list[Candidate]:
-    """Structurally-ranked block shapes for a rank-1/2/3 domain, with
-    graceful degradation: if nothing fits the VMEM budget, re-enumerate
-    without the filter and keep only the smallest-footprint shape so
-    ``auto`` still resolves (marked ``fallback`` by the caller)."""
+    """Structurally-ranked (block, fuse_steps) configurations for a
+    rank-1/2/3 domain, with graceful degradation: if nothing fits the
+    VMEM budget, re-enumerate without the filter and keep only the
+    smallest-footprint shape so ``auto`` still resolves (marked
+    ``fallback`` by the caller)."""
     cands = enumerate_candidates_nd(
-        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        fuse_steps_options=fuse_steps_options,
     )
     if cands:
         return cands
     unfiltered = enumerate_candidates_nd(
-        domain, radii, n_f, n_out, itemsize, vmem_budget=2**63
+        domain, radii, n_f, n_out, itemsize, vmem_budget=2**63,
+        fuse_steps_options=fuse_steps_options,
     )
     if not unfiltered:
         return []
@@ -230,11 +259,14 @@ def auto_block_nd(
     aux=None,
     strategy: str = "swc",
     unroll: int = 1,
+    fuse_steps: int = 1,
     interpret: bool = False,
     session: TuningSession | None = None,
     vmem_budget: int = VMEM_BUDGET,
 ) -> tuple[int, ...]:
-    """Resolve ``block="auto"`` for the fused engine at any rank.
+    """Resolve ``block="auto"`` for the fused engine at any rank (the
+    temporal depth is FIXED here — ``auto_fuse_nd`` runs the joint
+    block/depth search).
 
     Eager call sites get the full protocol (measure top-k on the actual
     operand, persist); traced call sites get the cache or the structural
@@ -251,14 +283,15 @@ def auto_block_nd(
         ops, f_padded.shape, n_out, strategy=strategy,
         dtype=str(f_padded.dtype),
         n_aux=aux.shape[0] if aux is not None else 0,
-        unroll=unroll,
+        unroll=unroll, fuse_steps=fuse_steps,
     )
     rank, domain, radii = probe.rank, probe.interior, probe.radii
     n_f = probe.n_f
     itemsize = f_padded.dtype.itemsize
     key = probe.tuning_key()
     cands = fused_nd_candidates(
-        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        fuse_steps_options=(fuse_steps,),
     )
     if not cands:  # degenerate domain: let the planner clamp a default
         return DEFAULT_BLOCKS[rank]
@@ -269,7 +302,8 @@ def auto_block_nd(
         rec = sess.cache.get(key)
         if rec is None:
             rec = TuningRecord(
-                block=cands[0].block, timings_us={}, source="fallback"
+                block=cands[0].block, timings_us={}, source="fallback",
+                fuse_steps=fuse_steps,
             )
             sess.cache.put(key, rec)
         return tuple(rec.block)
@@ -278,11 +312,12 @@ def auto_block_nd(
     if _is_concrete(f_padded):
         from repro.kernels import ops as kops
 
-        def measure(blk):
+        def measure(cand):
             def fn():
                 return kops.fused_stencil_nd(
-                    f_padded, ops, phi, n_out, aux=aux, block=blk,
-                    strategy=strategy, unroll=probe.unroll,
+                    f_padded, ops, phi, n_out, aux=aux,
+                    block=cand.block, strategy=strategy,
+                    unroll=probe.unroll, fuse_steps=fuse_steps,
                     interpret=interpret,
                 )
 
@@ -292,6 +327,98 @@ def auto_block_nd(
 
     record = sess.tune(key, cands, measure)
     return tuple(record.block)
+
+
+def auto_fuse_nd(
+    f_interior,
+    ops,
+    phi,
+    n_out: int,
+    *,
+    aux=None,
+    strategy: str = "swc",
+    interpret: bool | None = None,
+    session: TuningSession | None = None,
+    vmem_budget: int = VMEM_BUDGET,
+    depth_options: Sequence[int] = (1, 2, 3, 4),
+) -> tuple[tuple[int, ...], int]:
+    """Resolve ``fuse_steps="auto"``: the JOINT (block, temporal depth)
+    search over an UNPADDED field stack (n_f, *spatial).
+
+    Candidates are every (block, depth) pair the traffic-model-driven
+    cost model admits (per-depth VMEM filter, tiny-block guard), ranked
+    by modeled per-step HBM traffic plus weighted redundant-halo
+    compute. Eager call sites measure the top-k — padding the operand by
+    ``radius · depth`` per candidate so each depth times the kernel it
+    would actually run — and persist the winner under one ``:fauto``
+    key; traced call sites take the cached or structural winner. Returns
+    ``(block, fuse_steps)``.
+
+    Depths that don't self-map (``n_out != n_f + n_aux``) can't fuse;
+    only depth 1 is enumerated for them.
+    """
+    import jax.numpy as jnp
+
+    sess = session if session is not None else default_session()
+    domain = tuple(f_interior.shape[1:])
+    radii = ops.radius_per_axis()
+    n_f = f_interior.shape[0]
+    n_aux = aux.shape[0] if aux is not None else 0
+    itemsize = f_interior.dtype.itemsize
+    if isinstance(phi, (tuple, list)):
+        depth_options = (len(phi),)  # a φ sequence pins the depth
+    if n_out != n_f + n_aux:
+        depth_options = (1,)
+    key = fused_nd_key(
+        domain, radii, n_f, n_out, str(f_interior.dtype), strategy,
+        fuse_steps="auto",
+    )
+    cands = fused_nd_candidates(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        fuse_steps_options=tuple(depth_options),
+    )
+    if not cands:
+        from repro.kernels.plan import DEFAULT_BLOCKS
+
+        return DEFAULT_BLOCKS[len(domain)], 1
+    if cands[0].vmem_bytes > vmem_budget:
+        rec = sess.cache.get(key)
+        if rec is None:
+            rec = TuningRecord(
+                block=cands[0].block, timings_us={}, source="fallback",
+                fuse_steps=cands[0].fuse_steps,
+            )
+            sess.cache.put(key, rec)
+        return tuple(rec.block), int(rec.fuse_steps)
+
+    measure = None
+    if _is_concrete(f_interior) and (aux is None or _is_concrete(aux)):
+        from repro.kernels import ops as kops
+
+        def measure(cand):
+            depth = cand.fuse_steps
+            pad = [(0, 0)] + [(r * depth,) * 2 for r in radii]
+            fp = jnp.pad(f_interior, pad, mode="wrap")
+            aux_p = aux
+            if aux is not None and depth > 1:
+                apad = [(0, 0)] + [(r * (depth - 1),) * 2 for r in radii]
+                aux_p = jnp.pad(aux, apad, mode="wrap")
+
+            def fn():
+                return kops.fused_stencil_nd(
+                    fp, ops, phi, n_out, aux=aux_p, block=cand.block,
+                    strategy=strategy, fuse_steps=depth,
+                    interpret=interpret,
+                )
+
+            # One launch advances ``depth`` steps — depths compete on
+            # per-step time, not per-launch time.
+            return time_candidate(
+                fn, warmup=sess.warmup, iters=sess.iters
+            ) / depth
+
+    record = sess.tune(key, cands, measure)
+    return tuple(record.block), int(record.fuse_steps)
 
 
 def auto_block_3d(
@@ -320,11 +447,13 @@ def lookup_fused_nd(
     strategy: str,
     session: TuningSession | None = None,
     unroll: int = 1,
+    fuse_steps: int | str = 1,
 ) -> TuningRecord | None:
     """Cached record for a fused stencil call on an UNPADDED field
     stack (n_f, *spatial) — the read-only mirror of the key derivation
-    in ``auto_block_nd``, for benchmarks/examples that want to report
-    which block ``"auto"`` resolved to."""
+    in ``auto_block_nd``/``auto_fuse_nd``, for benchmarks/examples that
+    want to report which configuration ``"auto"`` resolved to. Pass
+    ``fuse_steps="auto"`` to look up a joint block/depth record."""
     sess = session if session is not None else default_session()
     key = fused_nd_key(
         tuple(f_interior.shape[1:]),
@@ -334,6 +463,7 @@ def lookup_fused_nd(
         str(f_interior.dtype),
         strategy,
         unroll=unroll,
+        fuse_steps=fuse_steps,
     )
     return sess.cache.get(key)
 
@@ -389,13 +519,14 @@ def auto_block_xcorr1d(
     measure = None
     if _is_concrete(f_padded) and _is_concrete(g):
 
-        def measure(blk):
+        def measure(cand):
             from repro.kernels import ops as kops
 
             def fn():
                 return kops.xcorr1d(
-                    f_padded, g, strategy=strategy, block_size=int(blk),
-                    unroll=unroll, interpret=interpret,
+                    f_padded, g, strategy=strategy,
+                    block_size=int(cand.block), unroll=unroll,
+                    interpret=interpret,
                 )
 
             return time_candidate(
@@ -437,13 +568,13 @@ def auto_block_conv1d(
     measure = None
     if _is_concrete(x) and _is_concrete(w):
 
-        def measure(blk):
+        def measure(cand):
             from repro.kernels import ops as kops
 
             def fn():
                 return kops.conv1d_depthwise(
-                    x, w, activation=activation, block_seq=int(blk),
-                    interpret=interpret,
+                    x, w, activation=activation,
+                    block_seq=int(cand.block), interpret=interpret,
                 )
 
             return time_candidate(

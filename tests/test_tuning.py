@@ -114,9 +114,9 @@ def test_session_cache_hit_skips_measurement(cache_dir):
     cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
     calls = []
 
-    def measure(block):
-        calls.append(block)
-        return 1.0 if block != cands[0].block else 0.5
+    def measure(cand):
+        calls.append(cand.block)
+        return 1.0 if cand.block != cands[0].block else 0.5
 
     sess = TuningSession(top_k=2)
     rec1 = sess.tune(KEY, cands, measure)
@@ -136,8 +136,8 @@ def test_session_upgrades_model_record_when_measurable(cache_dir):
 
     calls = []
 
-    def measure(block):
-        calls.append(block)
+    def measure(cand):
+        calls.append(cand.block)
         return 1.0
 
     upgraded = sess.tune(KEY, cands, measure)
@@ -150,7 +150,7 @@ def test_session_upgrades_model_record_when_measurable(cache_dir):
 def test_session_all_discarded_falls_back_to_model(cache_dir):
     cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
 
-    def measure(block):
+    def measure(cand):
         raise RuntimeError("launch failed")  # paper: discarded launches
 
     rec = TuningSession().tune(KEY, cands, measure)
