@@ -10,6 +10,11 @@ benchmarks temporal fusion: one kernel advances that many Euler steps
 on halo-widened VMEM blocks, timings are reported PER STEP, and the
 derived column carries the traffic model's predicted HBM reduction so
 measured and modeled wins land in the same artifact row.
+
+The ``--strategies`` driver flag widens the strategy sweep — e.g.
+``--strategies swc_stream`` benchmarks the explicit-streaming kernel
+(y-streaming at rank 2, z-streaming at rank 3; skipped at rank 1,
+which has no cross-stream axis), composing with ``--fuse-steps``.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ def run(
     full: bool = False,
     dims: tuple[int, ...] = (1, 2, 3),
     fuse_steps: int = 1,
+    strategies: tuple[str, ...] = ("hwc", "swc"),
 ) -> None:
     shapes = {
         1: (1 << (22 if full else 14 if smoke() else 18),),
@@ -42,13 +48,15 @@ def run(
             f0 = p.init_field()
             n = int(np.prod(shape))
             roof = 2 * n * 4 / TPU_V5E.hbm_bw
-            for strat in ("hwc", "swc"):
+            for strat in strategies:
+                if strat == "swc_stream" and ndim < 2:
+                    continue  # streaming needs a cross-stream axis
                 tuned = ""
-                if strat == "swc":
+                if strat in ("swc", "swc_stream"):
                     op = p.step_op(strat, block="auto", fuse_steps=fuse_steps)
                     op(f0)  # eager: tune-and-persist on a cache miss
                     rec = lookup_fused_nd(
-                        f0, op.ops, 1, "swc", fuse_steps=fuse_steps
+                        f0, op.ops, 1, strat, fuse_steps=fuse_steps
                     )
                     if rec is not None:
                         tuned = (f";tuned_block={format_block(rec.block)}"
@@ -59,6 +67,7 @@ def run(
                                 block_base=rec.block,
                                 block_fused=rec.block,
                                 fuse_steps=fuse_steps,
+                                stream=strat == "swc_stream",
                             )
                             tuned += f";traffic_model_x={ratio:.2f}"
                 else:

@@ -162,6 +162,11 @@ def main() -> None:
                          "it (fig11): S in-kernel time steps per launch "
                          "on halo-widened blocks, timings reported per "
                          "step (default 1)")
+    ap.add_argument("--strategies", default=None, metavar="S[,S...]",
+                    help="restrict/widen the caching-strategy sweep for "
+                         "modules that take one (fig11), e.g. "
+                         "--strategies swc_stream or --strategies "
+                         "hwc,swc,swc_stream (default: hwc,swc)")
     args = ap.parse_args()
     if args.fuse_steps < 1:
         ap.error("--fuse-steps must be >= 1")
@@ -175,6 +180,16 @@ def main() -> None:
             dims = ()
         if not dims or any(d not in (1, 2, 3) for d in dims):
             ap.error("--dims entries must be in {1, 2, 3}")
+    strategies = None
+    if args.strategies is not None:
+        strategies = tuple(
+            s.strip() for s in args.strategies.split(",") if s.strip()
+        )
+        bad = [s for s in strategies if s not in ("hwc", "swc", "swc_stream")]
+        if not strategies or bad:
+            ap.error(
+                "--strategies entries must be in {hwc, swc, swc_stream}"
+            )
     header()
     for name in MODULES:
         if args.only and args.only not in name:
@@ -186,6 +201,8 @@ def main() -> None:
             kwargs["dims"] = dims  # others run normally (no rank sweep)
         if args.fuse_steps != 1 and "fuse_steps" in params:
             kwargs["fuse_steps"] = args.fuse_steps
+        if strategies is not None and "strategies" in params:
+            kwargs["strategies"] = strategies
         mod.run(full=args.full, **kwargs)
     if args.json:
         write_json(args.json)

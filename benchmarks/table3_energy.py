@@ -6,14 +6,60 @@ Throughput here is the TPU-roofline bound for each case (the deployable
 upper bound from §Roofline terms), TDP = v5e-class 200 W. Flagged as
 DERIVED in the name — on hardware the same harness divides measured
 throughput instead.
+
+The ``fused_energy`` rows close the temporal-fusion loop on Table 3: a
+``fuse_steps`` sweep over the depth-S diffusion kernel emitting
+measured-vs-modeled J/update per depth. The modeled term converts the
+traffic model's HBM bytes/step to time at the roofline bandwidth and
+multiplies by TDP; the measured term multiplies the timed per-step wall
+clock by TDP (on this CPU container the "measured" number exercises the
+harness — on TPU hardware the same rows report real silicon energy).
+See docs/benchmarks.md for the row schema.
 """
 from __future__ import annotations
 
+import jax
+import numpy as np
 
-from benchmarks.util import emit
+from benchmarks.util import emit, smoke, time_fn
 from repro.core.rooflinelib import TPU_V5E, stencil_ideal_bytes
 from repro.core.stencil import derivative_operator_set
+from repro.core.trafficmodel import stencil_hbm_bytes_per_step
 from repro.physics.mhd import N_FIELDS
+
+
+def _fused_energy_sweep(full: bool) -> None:
+    """Measured-vs-modeled J/update per temporal-fusion depth (the
+    ROADMAP fused-depth energy-table item)."""
+    from repro.physics.diffusion import DiffusionProblem
+    from repro.tuning import lookup_fused_nd
+
+    hw = TPU_V5E
+    shape = (
+        (2048, 2048) if full else (64, 64) if smoke() else (256, 256)
+    )
+    p = DiffusionProblem(shape, accuracy=6)
+    f0 = p.init_field()
+    n = int(np.prod(shape))
+    for depth in (1, 2, 4):
+        op = p.step_op("swc", block="auto", fuse_steps=depth)
+        op(f0)  # eager warm: tune-and-persist on a cache miss
+        rec = lookup_fused_nd(f0, op.ops, 1, "swc", fuse_steps=depth)
+        block = tuple(rec.block) if rec is not None else (16, 128)
+        t = time_fn(jax.jit(op), f0, iters=3) / depth
+        bytes_step = stencil_hbm_bytes_per_step(
+            shape, block, (p.radius,) * p.ndim, 1, 1, 4, depth
+        )
+        t_model = bytes_step / hw.hbm_bw
+        measured_uj = t * hw.tdp_watts / n * 1e6
+        modeled_uj = t_model * hw.tdp_watts / n * 1e6
+        emit(
+            f"table3/fused_energy/2d_r{p.radius}_f{depth}", t,
+            f"uJ_per_update_measured={measured_uj:.4f};"
+            f"uJ_per_update_modeled={modeled_uj:.6f};"
+            f"model_bytes_per_step={bytes_step:.0f};"
+            f"tdp_W={hw.tdp_watts:.0f}",
+        )
 
 
 def run(full: bool = False) -> None:
@@ -55,3 +101,5 @@ def run(full: bool = False) -> None:
             f"table3/derived_energy/{name}", t,
             f"Mupdates_per_s_per_W={mups_w:.1f};tdp_W={hw.tdp_watts:.0f}",
         )
+
+    _fused_energy_sweep(full)

@@ -6,6 +6,13 @@
    (paper Eq. 5-7), validated against the exact discrete eigenvalue.
 3. A reduced LM architecture from the zoo taking real train steps.
 
+Demos 1-2 are the paper reproduction: everything they touch lives in
+``repro.{core,kernels,physics,tuning}`` (the StencilPlan pipeline —
+see docs/architecture.md). Demo 3 is NOT part of the stencil pipeline:
+``repro.models`` / ``repro.configs`` are the beyond-paper architecture
+zoo that reuses the same kernel techniques (e.g. mamba2's depthwise
+conv); skip it if you are here for the stencils.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -59,7 +66,8 @@ def diffusion_demo():
 
 
 def lm_demo():
-    print("=== 3. architecture zoo: one real train step ===")
+    print("=== 3. architecture zoo (beyond-paper; not the stencil "
+          "pipeline): one real train step ===")
     from repro.configs.registry import get_config, get_model, reduced_config
     from repro.optim import AdamWConfig, adamw_init, adamw_update
 

@@ -19,9 +19,10 @@ pipeline (planner → rank-generic emitter → tuning cache) except
                            hardware-managed-cache analogue)
   ``swc``        1, 2, 3   Pallas kernel, VMEM residency owned by us, blocks
                            auto-pipelined (paper Fig. 5a on TPU)
-  ``swc_stream``       3   Pallas kernel, explicit z-streaming with carried
-                           halo + prefetch DMA (paper Fig. 5b on TPU); a
-                           rank-3 plan attribute
+  ``swc_stream``    2, 3   Pallas kernel, explicit streaming of the slowest
+                           spatial axis (z at rank 3, y at rank 2) with
+                           carried halo + prefetch DMA (paper Fig. 5b on
+                           TPU); composes with ``fuse_steps``
   ============  =========  =====================================================
 
 The same object also runs *distributed* over a device mesh: the domain is
@@ -64,7 +65,42 @@ STRATEGIES = ("hwc", "swc", "swc_stream")
 
 @dataclasses.dataclass(frozen=True)
 class FusedStencilOp:
-    """One fused update step over an (n_f, *spatial) field stack."""
+    """One fused update step over an (n_f, *spatial) field stack.
+
+    Args (dataclass fields):
+        ops: the :class:`~repro.core.stencil.OperatorSet` of linear
+            stencil operators (γ — every A·B product the update needs).
+        phi: point-wise map from ``{op_name: (n_f, *spatial)}`` (plus an
+            optional aux array) to the (n_out, *spatial) update; may be
+            a sequence of ``fuse_steps`` per-sweep callables.
+        n_out: number of output fields φ produces.
+        boundary_mode: ψ — how ghost cells are filled ("periodic", …).
+        strategy: caching regime — "hwc", "swc" or "swc_stream" (see the
+            module docstring table).
+        block: rank-length tile (x last), ``"auto"`` (persistent tuning
+            cache), or None (per-rank default).
+        fuse_steps: temporal-fusion depth (int ≥ 1, or ``"auto"`` for
+            the joint block/depth search).
+
+    Calling the op applies one (depth-fused) update::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.fusion import FusedStencilOp
+        >>> from repro.core.stencil import derivative_operator_set
+        >>> ops = derivative_operator_set(2, 2, spacing=0.5)
+        >>> op = FusedStencilOp(
+        ...     ops, lambda d: d["val"] + 0.1 * (d["dxx"] + d["dyy"]),
+        ...     n_out=1, strategy="swc")
+        >>> out = op(jnp.zeros((1, 8, 16)))
+        >>> out.shape
+        (1, 8, 16)
+
+    Raises:
+        ValueError: on an invalid strategy, a strategy/rank mismatch
+            (``swc_stream`` needs rank ≥ 2), a non-periodic boundary or
+            ``swc_stream`` with depth > 1 prerequisites unmet, or a
+            per-step φ sequence whose length disagrees with the depth.
+    """
 
     ops: OperatorSet
     phi: PhiLike
@@ -79,7 +115,8 @@ class FusedStencilOp:
     # Temporal fusion depth: one call advances this many time steps in
     # ONE kernel (halo widened to radius·depth, intermediates VMEM-only).
     # "auto" resolves (block, depth) jointly from the tuning subsystem's
-    # traffic-model search; requires strategy="swc" and block="auto".
+    # traffic-model search; requires strategy="swc"/"swc_stream" and
+    # block="auto".
     fuse_steps: int | str = 1
 
     def __post_init__(self):
@@ -87,11 +124,11 @@ class FusedStencilOp:
             raise ValueError(
                 f"strategy {self.strategy!r} not in {STRATEGIES}"
             )
-        if self.strategy == "swc_stream" and self.ops.ndim != 3:
+        if self.strategy == "swc_stream" and self.ops.ndim < 2:
             raise ValueError(
-                "swc_stream (explicit z-streaming) requires a 3-D "
-                f"operator set; got ndim={self.ops.ndim} — use "
-                "strategy='swc'"
+                "swc_stream (explicit streaming of the slowest axis) "
+                f"requires a 2-D or 3-D operator set; got "
+                f"ndim={self.ops.ndim} — use strategy='swc'"
             )
         if isinstance(self.block, str) and self.block != "auto":
             raise ValueError(
@@ -104,22 +141,19 @@ class FusedStencilOp:
                     f"fuse_steps must be an int >= 1 or 'auto', got "
                     f"{self.fuse_steps!r}"
                 )
-            if self.strategy != "swc" or self.block != "auto":
+            if self.strategy not in ("swc", "swc_stream") or (
+                self.block != "auto"
+            ):
                 raise ValueError(
                     "fuse_steps='auto' resolves through the joint "
                     "(block, depth) tuning search — it requires "
-                    "strategy='swc' and block='auto'"
+                    "strategy='swc' or 'swc_stream' and block='auto'"
                 )
         elif self.fuse_steps < 1:
             raise ValueError(
                 f"fuse_steps must be >= 1, got {self.fuse_steps}"
             )
         if self._depth_or_none() != 1:
-            if self.strategy == "swc_stream":
-                raise ValueError(
-                    "temporal fusion (fuse_steps > 1) is not supported "
-                    "by swc_stream — use strategy='swc'"
-                )
             if self.boundary_mode != "periodic":
                 raise ValueError(
                     "temporal fusion requires boundary_mode='periodic': "
@@ -148,6 +182,8 @@ class FusedStencilOp:
 
     @property
     def radius_per_axis(self) -> tuple[int, ...]:
+        """Per-axis halo radius of the operator set (ghost cells one
+        un-fused application consumes on each side)."""
         return self.ops.radius_per_axis()
 
     # -- single device ------------------------------------------------------
@@ -239,9 +275,35 @@ class FusedStencilOp:
     ) -> jnp.ndarray:
         """Apply inside ``shard_map``: exchange halos over the mesh axes
         assigned to each spatial dimension, then run the local fused
-        kernel. ``mesh_axes[a]`` names the mesh axis sharding spatial axis
-        ``a`` (None = unsharded → local boundary padding); it must have
-        exactly one entry per spatial dimension.
+        kernel.
+
+        Args:
+            f_local: this shard's (n_f, *local_spatial) field block.
+            mesh_axes: one entry per spatial dimension — the mesh-axis
+                name sharding that dimension, or None for unsharded
+                (local boundary padding).
+            aux: optional (n_aux, *local_spatial) point-wise inputs
+                forwarded to φ (exchanged at ``radius·(fuse_steps-1)``
+                when depth > 1).
+            overlap: emit the compute/communication overlap
+                decomposition (below); numerics are unchanged.
+
+        Returns:
+            The (n_out, *local_spatial) update for this shard.
+
+        Raises:
+            ValueError: when ``mesh_axes`` does not have exactly one
+                entry per spatial dimension.
+            NotImplementedError: for non-periodic boundary modes.
+
+        Example (2 shards on a "data" mesh axis over y)::
+
+            jax.shard_map(
+                lambda fl: op.apply_sharded(fl, (None, "data", None)),
+                mesh=mesh,
+                in_specs=P(None, None, "data", None),
+                out_specs=P(None, None, "data", None),
+            )(f)
 
         Periodic boundaries compose exactly with the ring permute: the
         wrap-around neighbor IS the periodic image.
@@ -257,8 +319,10 @@ class FusedStencilOp:
         is exchanged at ``radius * (fuse_steps - 1)``): one exchange
         buys ``fuse_steps`` time steps, cutting ICI message count the
         same way the kernel cuts HBM round trips. The overlap
-        decomposition currently applies at depth 1 only — deeper ops
-        fall back to plain exchange-then-apply.
+        decomposition composes with any depth: the halo-independent
+        interior shrinks by ``radius * fuse_steps`` per sharded axis and
+        the dependent edge slabs (with their ``radius * (fuse_steps-1)``
+        aux windows) are computed from the exchanged array afterwards.
         """
         if self.fuse_steps == "auto":
             return self.resolved(f_local, aux).apply_sharded(
@@ -277,7 +341,7 @@ class FusedStencilOp:
                 "sharded stencils currently support periodic boundaries "
                 "(the paper's simulation setup)"
             )
-        if overlap and depth == 1:
+        if overlap:
             out = self._apply_sharded_overlap(f_local, mesh_axes, aux)
             if out is not None:
                 return out
@@ -301,44 +365,70 @@ class FusedStencilOp:
     ) -> jnp.ndarray | None:
         """Compute/communication overlap decomposition (module docstring).
 
+        Generalized over the temporal-fusion depth ``S = fuse_steps``:
+        the exchange (and the halo every output point consumes) widens
+        to ``radius·S`` per sharded axis, so the halo-independent
+        interior shrinks by ``radius·S`` per side and the dependent edge
+        slabs are ``radius·S`` wide. The carry ``aux`` is consumed at
+        ``radius·(S-1)`` ghost cells per sweep boundary, so it is
+        exchanged at that width and every sub-computation slices its
+        aligned aux window from the exchanged array.
+
         Returns None when the decomposition doesn't apply (no sharded
         axis, or a local extent too small to hold an interior) — the
         caller falls back to the plain exchange-then-apply path.
         """
+        depth = int(self.fuse_steps)
         rads = self.radius_per_axis
+        wrads = [r * depth for r in rads]  # halo consumed per output
+        arads = [r * (depth - 1) for r in rads]  # aux ghost width
         spatial_axes = tuple(range(1, f_local.ndim))
         sharded = [
-            (ax, r)
-            for ax, r, name in zip(spatial_axes, rads, mesh_axes)
-            if name is not None and r > 0
+            (ax, w)
+            for ax, w, name in zip(spatial_axes, wrads, mesh_axes)
+            if name is not None and w > 0
         ]
         if not sharded:
             return None  # nothing to overlap with
-        if any(f_local.shape[ax] <= 2 * r for ax, r in sharded):
+        if any(f_local.shape[ax] <= 2 * w for ax, w in sharded):
             return None  # no interior: every point depends on halos
 
         # Emit the exchange FIRST: the permutes depend only on edge
         # planes, the interior compute below only on local data, so the
         # scheduler can run them concurrently.
         fp = exchange_halos_nd(
-            f_local, rads, mesh_axes, spatial_axes=spatial_axes,
+            f_local, wrads, mesh_axes, spatial_axes=spatial_axes,
         )
+        # The carry is exchanged at its own (narrower) width; at depth 1
+        # that width is zero and aux_p is aux itself. Unsharded axes get
+        # the local periodic wrap inside exchange_halos_nd.
+        aux_p = None
+        if aux is not None:
+            aux_p = exchange_halos_nd(
+                aux, arads, mesh_axes,
+                spatial_axes=tuple(range(1, aux.ndim)),
+            )
 
         # Interior: along each sharded axis the local block IS the
         # interior plus its (not-yet-arrived) halo, so it only needs
         # local periodic padding on the unsharded axes.
         pad_width = [(0, 0)] * f_local.ndim
-        for ax, r, name in zip(spatial_axes, rads, mesh_axes):
-            if name is None and r > 0:
-                pad_width[ax] = (r, r)
+        for ax, w, name in zip(spatial_axes, wrads, mesh_axes):
+            if name is None and w > 0:
+                pad_width[ax] = (w, w)
         f_interior_padded = jnp.pad(f_local, pad_width, mode="wrap")
         interior_view, edges = interior_first(
-            f_local, [r for _, r in sharded], [ax for ax, _ in sharded]
+            f_local, [w for _, w in sharded], [ax for ax, _ in sharded]
         )
         int_sl = [slice(None)] * f_local.ndim
-        for ax, r in sharded:
-            int_sl[ax] = slice(r, f_local.shape[ax] - r)
-        aux_int = aux[tuple(int_sl)] if aux is not None else None
+        aux_sl = [slice(None)] * f_local.ndim
+        for ax, w in sharded:
+            int_sl[ax] = slice(w, f_local.shape[ax] - w)
+            # aux_p leads local coords by arads; the interior's aux
+            # window spans interior ± arads on every sharded axis.
+            a = arads[ax - 1]
+            aux_sl[ax] = slice(w, f_local.shape[ax] - w + 2 * a)
+        aux_int = aux_p[tuple(aux_sl)] if aux_p is not None else None
         out_interior = self.apply_padded(f_interior_padded, aux=aux_int)
         assert out_interior.shape[1:] == interior_view.shape[1:]
 
@@ -354,15 +444,16 @@ class FusedStencilOp:
             n_ax = f_local.shape[ax]
             s = sl.start or 0
             e = n_ax if sl.stop is None else sl.stop
-            r_ax = rads[ax - 1]
+            w_ax = wrads[ax - 1]
+            a_ax = arads[ax - 1]
             w_sl = [slice(None)] * fp.ndim
-            w_sl[ax] = slice(s, e + 2 * r_ax)
+            w_sl[ax] = slice(s, e + 2 * w_ax)
             slab_out = self.apply_padded(
                 fp[tuple(w_sl)],
-                aux=None if aux is None else aux[
+                aux=None if aux_p is None else aux_p[
                     tuple(
-                        slice(s, e) if a == ax else slice(None)
-                        for a in range(aux.ndim)
+                        slice(s, e + 2 * a_ax) if a == ax else slice(None)
+                        for a in range(aux_p.ndim)
                     )
                 ],
             )
@@ -382,6 +473,28 @@ def integrate(
     steps in one kernel; a remainder ``n_steps % fuse_steps`` is
     finished with a shallower op so the step count is exact.
     ``fuse_steps="auto"`` is resolved once, up front, against ``f0``.
+
+    Args:
+        op: the fused update to iterate (one uniform φ — per-step φ
+            sequences are driven by their solver, not ``integrate``).
+        f0: initial (n_f, *spatial) field stack.
+        n_steps: exact number of TIME steps to advance.
+
+    Returns:
+        The (n_f, *spatial) field stack after ``n_steps`` steps.
+
+    Raises:
+        ValueError: when ``op.phi`` is a per-step sequence.
+
+    Example::
+
+        >>> from repro.physics.diffusion import DiffusionProblem
+        >>> from repro.core.fusion import integrate
+        >>> p = DiffusionProblem((16, 32), accuracy=6)
+        >>> op = p.step_op("swc", fuse_steps=2)
+        >>> out = integrate(op, p.init_field(), 7)  # 3 fused + 1 plain
+        >>> out.shape
+        (1, 16, 32)
     """
     op = op.resolved(f0)
     depth = int(op.fuse_steps)
@@ -393,6 +506,7 @@ def integrate(
     full, rem = divmod(n_steps, depth)
 
     def body(f, _):
+        """One fused launch: advance ``depth`` time steps."""
         return op(f), None
 
     out, _ = jax.lax.scan(body, f0, None, length=full)

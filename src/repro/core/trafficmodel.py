@@ -31,10 +31,12 @@ needs.
 The second half of this module models *stencil* HBM traffic under
 temporal fusion (fuse_steps in-kernel time steps on halo-widened
 blocks): what one simulated time step moves through HBM as a function
-of (block, radii, depth). ``repro.tuning.costmodel`` scores its
-(block, fuse_steps) candidates through these exact functions, so the
-autotuner's temporal term and the reported traffic model cannot
-diverge.
+of (block, radii, depth), with a separate function for the explicit-
+streaming kernel (whose carried halo planes eliminate the stream-axis
+halo re-fetch). ``repro.tuning.costmodel`` scores its joint
+(block, fuse_steps, stream) candidates through these exact functions,
+so the autotuner's temporal/streaming terms and the reported traffic
+model cannot diverge.
 """
 from __future__ import annotations
 
@@ -186,6 +188,42 @@ def stencil_hbm_bytes_per_step(
     return (read + write) * itemsize / fuse_steps
 
 
+def stencil_stream_hbm_bytes_per_step(
+    domain: Sequence[int],
+    block: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    fuse_steps: int = 1,
+) -> float:
+    """Modeled HBM bytes per simulated TIME step for the explicit-
+    streaming kernel (``swc_stream``, paper Fig. 5b), any fuse depth.
+
+    The stream walks axis 0 (z at rank 3, y at rank 2) carrying
+    ``2·r₀·fuse_steps`` halo planes in VMEM between chunks, so — unlike
+    the pipelined model, which re-fetches the stream-axis halo for every
+    block — each cross-stream tile column reads the full stream extent
+    plus ONE leading/trailing halo: ``N₀ + 2·r₀·S`` planes of the
+    ``Π(τ_a + 2·r_a·S)`` cross window. Cross-axis halos are still
+    re-fetched per tile column. The interior is written once; a launch
+    advances ``fuse_steps`` steps, so the total is divided by the depth.
+    """
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    n_cols, read_per_col, points = 1, n_f, 1
+    for a, (n, t, r) in enumerate(zip(domain, block, radii)):
+        points *= n
+        if a == 0:
+            read_per_col *= n + 2 * r * fuse_steps
+        else:
+            n_cols *= _ceil_div(n, t)
+            read_per_col *= t + 2 * r * fuse_steps
+    read = n_cols * read_per_col
+    write = n_out * points
+    return (read + write) * itemsize / fuse_steps
+
+
 def stencil_redundant_compute_fraction(
     block: Sequence[int],
     radii: Sequence[int],
@@ -219,13 +257,19 @@ def stencil_traffic_reduction(
     block_base: Sequence[int],
     block_fused: Sequence[int],
     fuse_steps: int,
+    stream: bool = False,
 ) -> float:
     """Modeled per-step HBM-traffic reduction of a fused configuration
-    over its depth-1 baseline (>1 means the fused plan moves less)."""
-    base = stencil_hbm_bytes_per_step(
-        domain, block_base, radii, n_f, n_out, itemsize, 1
+    over its depth-1 baseline (>1 means the fused plan moves less).
+    ``stream=True`` models both sides with the explicit-streaming
+    kernel's byte function instead of the pipelined one."""
+    bytes_fn = (
+        stencil_stream_hbm_bytes_per_step
+        if stream
+        else stencil_hbm_bytes_per_step
     )
-    fused = stencil_hbm_bytes_per_step(
+    base = bytes_fn(domain, block_base, radii, n_f, n_out, itemsize, 1)
+    fused = bytes_fn(
         domain, block_fused, radii, n_f, n_out, itemsize, fuse_steps
     )
     return base / fused

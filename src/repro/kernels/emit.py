@@ -2,9 +2,9 @@
 
 This module subsumes the previously hand-written 1-D/3-D kernel bodies:
 one pipelined software-managed-cache emitter serves ranks 1, 2 and 3,
-and the explicit z-streaming variant (paper Fig. 5b) is selected by a
-rank-3 plan attribute (``strategy="swc_stream"``) rather than living in
-a separate code path.
+and the explicit-streaming variant (paper Fig. 5b) is selected by a
+plan attribute (``strategy="swc_stream"``, ranks 2 and 3, streaming the
+slowest spatial axis) rather than living in a separate code path.
 
 Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
 
@@ -21,10 +21,16 @@ Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
   that many times on the VMEM-resident block (valid region shrinking by
   one radius per sweep), so intermediate time steps never round-trip
   through HBM.
-* ``swc_stream`` — rank 3 only: the (y, x) tile is fixed per grid step
-  and the kernel streams z-chunks through an explicitly managed VMEM
-  working buffer with async-DMA prefetch and carried halo planes (see
-  DESIGN.md §2 for the TPU adaptation of the circular-buffer trick).
+* ``swc_stream`` — ranks 2 and 3: the cross-stream tile ((y, x) at rank
+  3, (x,) at rank 2) is fixed per grid step and the kernel streams
+  slowest-axis chunks (z at rank 3, y at rank 2) through an explicitly
+  managed VMEM working buffer with async-DMA prefetch and carried halo
+  planes (the TPU adaptation of the circular-buffer trick — see
+  docs/architecture.md for the worked rank-2 lowering).
+  ``plan.fuse_steps > 1`` composes: the carried halo widens to
+  ``2·r·fuse_steps`` planes and each chunk runs the temporal sweeps on
+  the streaming working set — the streaming variant of temporal
+  blocking.
 
 The HWC ("let the compiler manage residency") strategy lives in
 ``repro.kernels.ref`` as pure jnp.
@@ -93,6 +99,34 @@ def _kernel_pipelined(
             o_ref[..., e * tx : (e + 1) * tx] = val
 
 
+def _temporal_sweeps(
+    cur: jnp.ndarray,
+    ops: OperatorSet,
+    radii: tuple[int, ...],
+    tile: tuple[int, ...],
+    phis,
+) -> jnp.ndarray:
+    """Apply ``len(phis)`` fused sweeps to one VMEM-resident window.
+
+    ``cur``: (n_f, *(τ_a + 2·r_a·S)) — the tile staged with a halo of
+    one radius per sweep. Sweep ``s`` evaluates the operators over the
+    window shrunk to a ``r·(S-1-s)`` margin, so the final sweep lands
+    exactly on (·, *τ). Intermediate field stacks never leave registers/
+    VMEM. No aux carry (the streaming kernel rejects aux); the aux-aware
+    variant lives in :func:`_kernel_temporal`. Returns the final tile.
+    """
+    n_f = cur.shape[0]
+    n_steps = len(phis)
+    for s, phi in enumerate(phis):  # static: unrolled at trace time
+        margin = n_steps - 1 - s
+        sub_tile = tuple(t + 2 * r * margin for t, r in zip(tile, radii))
+        derivs = _block_derivs(cur, ops, radii, sub_tile)
+        val = phi(derivs)
+        if margin:
+            cur = val[:n_f]
+    return val
+
+
 def _kernel_temporal(
     f_ref, *rest, ops, radii, tile, phis, n_f, has_aux
 ):
@@ -104,32 +138,37 @@ def _kernel_temporal(
 
     ``rest`` is (aux_ref, o_ref) when the plan carries aux inputs, else
     (o_ref,). The staged aux window is ``tile + 2r(S-1)`` so every
-    intermediate sweep sees a point-wise-aligned carry.
+    intermediate sweep sees a point-wise-aligned carry. The aux-free
+    case delegates to :func:`_temporal_sweeps` (shared with the
+    streaming kernel) so the sweep-shrinking arithmetic lives once.
     """
-    aux_ref, o_ref = rest if has_aux else (None, rest[0])
+    if not has_aux:
+        (o_ref,) = rest
+        o_ref[...] = _temporal_sweeps(f_ref[...], ops, radii, tile, phis)
+        return
+    aux_ref, o_ref = rest
     n_steps = len(phis)
     cur = f_ref[...]
-    cur_aux = aux_ref[...] if has_aux else None
+    cur_aux = aux_ref[...]
     for s, phi in enumerate(phis):  # static: unrolled at trace time
         margin = n_steps - 1 - s  # sweeps remaining after this one
         sub_tile = tuple(
             t + 2 * r * margin for t, r in zip(tile, radii)
         )
         derivs = _block_derivs(cur, ops, radii, sub_tile)
-        val = phi(derivs, cur_aux) if has_aux else phi(derivs)
+        val = phi(derivs, cur_aux)
         if margin == 0:
             o_ref[...] = val
         else:
             cur = val[:n_f]
-            if has_aux:
-                n_aux = cur_aux.shape[0]
-                cur_aux = val[n_f : n_f + n_aux][
-                    (slice(None),)
-                    + tuple(
-                        slice(r, r + t + 2 * r * (margin - 1))
-                        for t, r in zip(tile, radii)
-                    )
-                ]
+            n_aux = cur_aux.shape[0]
+            cur_aux = val[n_f : n_f + n_aux][
+                (slice(None),)
+                + tuple(
+                    slice(r, r + t + 2 * r * (margin - 1))
+                    for t, r in zip(tile, radii)
+                )
+            ]
 
 
 def _grid_and_maps(plan: StencilPlan):
@@ -198,7 +237,7 @@ def fused_stencil_pallas(
         )
     if plan.strategy == "swc_stream":
         return _fused_stream(
-            f_padded, ops, phis[0], plan, interpret=interpret
+            f_padded, ops, phis, plan, interpret=interpret
         )
 
     radii, tile = plan.radii, plan.block
@@ -257,38 +296,54 @@ def fused_stencil_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Fig. 5b: explicit z-streaming with carried halo planes + prefetch DMA
-# (rank-3 plans only; selected by plan.strategy == "swc_stream").
+# Fig. 5b: explicit streaming along the slowest axis with carried halo
+# planes + prefetch DMA (rank-2/3 plans; plan.strategy == "swc_stream").
+# Temporal fusion composes: the carried halo widens to 2·r·fuse_steps
+# planes and each chunk runs the fused sweeps on the working set.
 # ---------------------------------------------------------------------------
 
 
 def _kernel_stream(
     f_hbm, o_hbm, work, pf0, pf1, outbuf, sem_pf, sem_out, *,
-    ops, rad, tile, phi, n_chunks,
+    ops, radii, tile, phis, n_chunks,
 ):
-    """Grid step = one (y, x) tile; the kernel streams all z-chunks.
+    """Grid step = one cross-stream tile; the kernel streams all chunks
+    of the slowest axis (z at rank 3, y at rank 2) through VMEM.
 
-    VMEM scratch:
-      ``work``  (n_f, τz+2rz, τy+2ry, τx+2rx) — the working set;
-      ``pf0/1`` (n_f, τz,     τy+2ry, τx+2rx) — double-buffered prefetch
-                 of the τz fresh planes for the next chunk;
-      ``outbuf``(n_out, τz, τy, τx)           — staging for output DMA.
+    With ``h_a = r_a · S`` (one radius of halo per fused sweep,
+    ``S = len(phis)``), the VMEM scratch is:
+
+      ``work``  (n_f, τ₀+2h₀, *(τ_a+2h_a)) — the working set; the
+                leading 2h₀ planes are the halo carried chunk to chunk
+                (the circular-buffer trick, unrolled as a plane copy);
+      ``pf0/1`` (n_f, τ₀, *(τ_a+2h_a)) — double-buffered prefetch of
+                the τ₀ fresh planes for the next chunk;
+      ``outbuf``(n_out, *τ) — staging for the output DMA.
+
+    Each chunk applies the ``S`` fused sweeps of
+    :func:`_temporal_sweeps` to the working set (valid region shrinking
+    one radius per sweep on every axis, including the stream axis), so
+    streaming and temporal fusion compose in one kernel.
     """
-    j = pl.program_id(0)
-    k = pl.program_id(1)
-    rz, ry, rx = rad
-    tz, ty, tx = tile
-    y0 = j * ty
-    x0 = k * tx
+    rank = len(tile)
+    halo = tuple(r * len(phis) for r in radii)
+    ts, hs = tile[0], halo[0]
+    cross_off = tuple(
+        pl.program_id(i) * tile[1 + i] for i in range(rank - 1)
+    )
+    cross_halo = tuple(
+        pl.ds(o, t + 2 * h)
+        for o, t, h in zip(cross_off, tile[1:], halo[1:])
+    )
+    cross_tile = tuple(
+        pl.ds(o, t) for o, t in zip(cross_off, tile[1:])
+    )
 
     def fresh_copy(chunk, pf_ref, slot):
-        """DMA the τz fresh planes of ``chunk`` into a prefetch buffer."""
+        """DMA the τ₀ fresh planes of ``chunk`` into a prefetch buffer."""
         return pltpu.make_async_copy(
             f_hbm.at[
-                :,
-                pl.ds(chunk * tz + 2 * rz, tz),
-                pl.ds(y0, ty + 2 * ry),
-                pl.ds(x0, tx + 2 * rx),
+                (slice(None), pl.ds(chunk * ts + 2 * hs, ts)) + cross_halo
             ],
             pf_ref,
             sem_pf.at[slot],
@@ -297,9 +352,8 @@ def _kernel_stream(
     # Prologue: leading halo planes go straight into the working buffer;
     # chunk 0's fresh planes start streaming into prefetch slot 0.
     halo_cp = pltpu.make_async_copy(
-        f_hbm.at[:, pl.ds(0, 2 * rz), pl.ds(y0, ty + 2 * ry),
-                 pl.ds(x0, tx + 2 * rx)],
-        work.at[:, pl.ds(0, 2 * rz)],
+        f_hbm.at[(slice(None), pl.ds(0, 2 * hs)) + cross_halo],
+        work.at[:, pl.ds(0, 2 * hs)],
         sem_out,  # reuse; waited below before any compute
     )
     halo_cp.start()
@@ -326,27 +380,25 @@ def _kernel_stream(
         @pl.when(slot == 0)
         def _():
             fresh_copy(chunk, pf0, 0).wait()
-            work[:, pl.ds(2 * rz, tz)] = pf0[...]
+            work[:, pl.ds(2 * hs, ts)] = pf0[...]
 
         @pl.when(slot == 1)
         def _():
             fresh_copy(chunk, pf1, 1).wait()
-            work[:, pl.ds(2 * rz, tz)] = pf1[...]
+            work[:, pl.ds(2 * hs, ts)] = pf1[...]
 
-        fblk = work[...]
-        derivs = _block_derivs(fblk, ops, (rz, ry, rx), (tz, ty, tx))
-        outbuf[...] = phi(derivs)
+        outbuf[...] = _temporal_sweeps(work[...], ops, radii, tile, phis)
         out_cp = pltpu.make_async_copy(
             outbuf,
-            o_hbm.at[:, pl.ds(chunk * tz, tz), pl.ds(y0, ty), pl.ds(x0, tx)],
+            o_hbm.at[(slice(None), pl.ds(chunk * ts, ts)) + cross_tile],
             sem_out,
         )
         out_cp.start()
 
-        # Carry the trailing halo: last 2rz planes become the next chunk's
-        # leading halo (VMEM-to-VMEM plane copy; see module docstring on
-        # why TPU prefers this over the circular buffer).
-        work[:, pl.ds(0, 2 * rz)] = work[:, pl.ds(tz, 2 * rz)]
+        # Carry the trailing halo: the last 2h₀ planes become the next
+        # chunk's leading halo (VMEM-to-VMEM plane copy; see module
+        # docstring on why TPU prefers this over the circular buffer).
+        work[:, pl.ds(0, 2 * hs)] = work[:, pl.ds(ts, 2 * hs)]
         out_cp.wait()
         return 0
 
@@ -354,31 +406,31 @@ def _kernel_stream(
 
 
 def _fused_stream(
-    f_padded, ops, phi, plan: StencilPlan, *, interpret: bool = False
+    f_padded, ops, phis, plan: StencilPlan, *, interpret: bool = False
 ):
-    rz, ry, rx = plan.radii
-    tz, ty, tx = plan.block
-    nz, ny, nx = plan.interior
-    n_chunks = nz // tz
+    """Lower an ``swc_stream`` plan (rank 2 or 3, any fuse depth)."""
+    tile, halo = plan.block, plan.halo
+    n_chunks = plan.interior[0] // tile[0]
     dtype = f_padded.dtype
+    cross = tuple(t + 2 * h for t, h in zip(tile[1:], halo[1:]))
 
     kernel = functools.partial(
-        _kernel_stream, ops=ops, rad=plan.radii, tile=plan.block,
-        phi=phi, n_chunks=n_chunks,
+        _kernel_stream, ops=ops, radii=plan.radii, tile=tile,
+        phis=phis, n_chunks=n_chunks,
     )
     return pl.pallas_call(
         kernel,
-        grid=(ny // ty, nx // tx),
+        grid=tuple(n // t for n, t in zip(plan.interior[1:], tile[1:])),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        out_shape=jax.ShapeDtypeStruct((plan.n_out, nz, ny, nx), dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (plan.n_out,) + plan.interior, dtype
+        ),
         scratch_shapes=[
-            pltpu.VMEM(
-                (plan.n_f, tz + 2 * rz, ty + 2 * ry, tx + 2 * rx), dtype
-            ),
-            pltpu.VMEM((plan.n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
-            pltpu.VMEM((plan.n_f, tz, ty + 2 * ry, tx + 2 * rx), dtype),
-            pltpu.VMEM((plan.n_out, tz, ty, tx), dtype),
+            pltpu.VMEM((plan.n_f, tile[0] + 2 * halo[0]) + cross, dtype),
+            pltpu.VMEM((plan.n_f, tile[0]) + cross, dtype),
+            pltpu.VMEM((plan.n_f, tile[0]) + cross, dtype),
+            pltpu.VMEM((plan.n_out,) + tile, dtype),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],

@@ -119,18 +119,22 @@ def fused_stencil_nd(
     (paper Eq. 9) — the thin dispatch over :class:`StencilPlan`.
 
     ``strategy``: 'hwc' (XLA-managed), 'swc' (Pallas pipelined blocks,
-    any rank) or 'swc_stream' (Pallas explicit z-streaming, paper
-    Fig. 5b, rank 3 only). ``block`` is a rank-length tile (``None`` →
-    per-rank default; longer tuples keep their trailing, x-last entries;
-    non-divisible extents shrink the tile to the largest divisor) or
-    ``"auto"``, which consults the persistent tuning cache (measuring on
-    a miss when eager) — for every rank, through the same cache.
+    any rank) or 'swc_stream' (Pallas explicit streaming of the slowest
+    axis with carried halo planes + prefetch DMA, paper Fig. 5b —
+    z-streaming at rank 3, y-streaming at rank 2). ``block`` is a
+    rank-length tile (``None`` → per-rank default; longer tuples keep
+    their trailing, x-last entries; non-divisible extents shrink the
+    tile to the largest divisor) or ``"auto"``, which consults the
+    persistent tuning cache (measuring on a miss when eager) — for
+    every rank and strategy, through the same cache.
 
     ``fuse_steps`` is the temporal-fusion depth: ``f_padded`` must be
     padded by ``radius * fuse_steps`` (and ``aux``, if any, by
     ``radius * (fuse_steps - 1)``), the op is applied that many times
     inside one kernel, and ``phi`` may be a sequence of per-step
-    callables. One call advances ``fuse_steps`` time steps.
+    callables. One call advances ``fuse_steps`` time steps. Depth > 1
+    composes with both 'swc' (halo-widened pipelined blocks) and
+    'swc_stream' (the carried halo widens to ``2·r·fuse_steps`` planes).
     """
     if interpret is None:
         interpret = _default_interpret()

@@ -27,6 +27,15 @@ from repro.core.stencil import OperatorSet
 
 STRATEGIES = ("swc", "swc_stream")
 
+# Spatial-axis letters in array order (slowest→fastest, x last). The
+# stream axis of an ``swc_stream`` plan is always axis 0 — z at rank 3,
+# y at rank 2 — and its letter joins the strategy id / tuning key.
+AXIS_LETTERS: dict[int, tuple[str, ...]] = {
+    1: ("x",),
+    2: ("y", "x"),
+    3: ("z", "y", "x"),
+}
+
 # Per-rank default tiles: x spans the lane dimension (long 1-D blocks
 # amortize per-grid-step pipeline overhead), y/z follow the paper's
 # TPU-friendly bases.
@@ -43,6 +52,33 @@ def largest_divisor_leq(n: int, cap: int) -> int:
         if n % t == 0:
             return t
     return 1
+
+
+def strategy_sid(
+    strategy: str,
+    rank: int,
+    unroll: int = 1,
+    fuse_steps: int | str = 1,
+) -> str:
+    """Canonical strategy-id derivation — the ONE place the stream
+    axis, unroll factor and temporal depth join the cache key.
+
+    Used by both :attr:`StencilPlan.strategy_id` and the tuning layer's
+    key mirror (``repro.tuning.session.fused_nd_key``), so the two can
+    never silently derive different cache ids. ``fuse_steps`` may be
+    the string ``"auto"`` (the joint block/depth search's ``:fauto``
+    suffix).
+    """
+    sid = strategy
+    if strategy == "swc_stream":
+        sid += f":s{AXIS_LETTERS[rank][0]}"
+    if unroll != 1:
+        sid += f":u{unroll}"
+    if fuse_steps == "auto":
+        sid += ":fauto"
+    elif fuse_steps != 1:
+        sid += f":f{fuse_steps}"
+    return sid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +98,27 @@ class StencilPlan:
     traded for memory traffic). Depth > 1 requires the op to be a
     self-map, ``n_out == n_f + n_aux``, so each sweep's output provides
     the next sweep's field stack (rows 0..n_f) and carry (the rest).
+
+    ``strategy="swc_stream"`` (ranks 2/3) streams the slowest spatial
+    axis (:attr:`stream_axis`) with carried halo planes instead of
+    tiling it in the Pallas grid; it composes with ``fuse_steps`` but
+    rejects aux inputs and element-wise unrolling.
+
+    Raises:
+        ValueError: from ``__post_init__`` for any inconsistent
+            combination — unknown strategy, rank/strategy mismatch,
+            tuple lengths not matching the rank, non-divisible tiles,
+            or unmet temporal-fusion prerequisites.
+
+    Example (build through the planner, not the constructor)::
+
+        >>> from repro.core.stencil import derivative_operator_set
+        >>> from repro.kernels.plan import plan_stencil
+        >>> ops = derivative_operator_set(2, 6, spacing=0.5)
+        >>> plan = plan_stencil(ops, (1, 262, 262), 1,
+        ...                     strategy="swc_stream")
+        >>> plan.block, plan.strategy_id
+        ((16, 128), 'swc_stream:sy')
     """
 
     rank: int
@@ -83,11 +140,12 @@ class StencilPlan:
             raise ValueError(
                 f"strategy {self.strategy!r} not in {STRATEGIES}"
             )
-        if self.strategy == "swc_stream" and self.rank != 3:
+        if self.strategy == "swc_stream" and self.rank == 1:
             raise ValueError(
-                "swc_stream (explicit z-streaming, paper Fig. 5b) is a "
-                f"rank-3 plan attribute; got rank {self.rank} — use "
-                "strategy='swc'"
+                "swc_stream (explicit streaming, paper Fig. 5b) streams "
+                "the slowest spatial axis while the lane tile stays "
+                "fixed — it requires rank 2 (y-stream) or 3 (z-stream); "
+                "at rank 1 use strategy='swc'"
             )
         if self.strategy == "swc_stream" and self.n_aux:
             raise ValueError("aux inputs: use strategy='swc'")
@@ -109,12 +167,6 @@ class StencilPlan:
                 f"fuse_steps must be >= 1, got {self.fuse_steps}"
             )
         if self.fuse_steps > 1:
-            if self.strategy == "swc_stream":
-                raise ValueError(
-                    "temporal fusion (fuse_steps > 1) requires "
-                    "strategy='swc' — the z-streaming kernel carries "
-                    "single-step halo planes"
-                )
             if self.unroll != 1:
                 raise ValueError(
                     "temporal fusion composes with the staged halo "
@@ -143,6 +195,24 @@ class StencilPlan:
         return self.block[-1] * self.unroll
 
     @property
+    def stream_axis(self) -> int | None:
+        """Array axis the explicit-streaming kernel walks, or None.
+
+        ``swc_stream`` plans always stream the slowest spatial axis
+        (axis 0): z at rank 3, y at rank 2 — the cross-stream tile stays
+        resident while halo planes are carried chunk to chunk.
+        """
+        return 0 if self.strategy == "swc_stream" else None
+
+    @property
+    def stream_axis_letter(self) -> str | None:
+        """Letter of :attr:`stream_axis` ("z"/"y"), or None for
+        non-streaming plans; recorded in :attr:`strategy_id`."""
+        if self.stream_axis is None:
+            return None
+        return AXIS_LETTERS[self.rank][self.stream_axis]
+
+    @property
     def halo(self) -> tuple[int, ...]:
         """Staged halo width per axis: one radius per fused sweep."""
         return tuple(r * self.fuse_steps for r in self.radii)
@@ -158,19 +228,19 @@ class StencilPlan:
 
     @property
     def kernel_name(self) -> str:
+        """Kernel family component of the cache key (rank-specific)."""
         return f"fused_stencil{self.rank}d"
 
     @property
     def strategy_id(self) -> str:
-        """Strategy component of the cache key; unroll and temporal
-        fusion depth are codegen configuration, so they join the key —
-        depth-1 and depth-2 plans cache separately."""
-        sid = self.strategy
-        if self.unroll != 1:
-            sid += f":u{self.unroll}"
-        if self.fuse_steps != 1:
-            sid += f":f{self.fuse_steps}"
-        return sid
+        """Strategy component of the cache key; the stream axis, unroll
+        and temporal fusion depth are codegen configuration, so they
+        join the key (via :func:`strategy_sid`) — depth-1 and depth-2
+        plans cache separately, and a y-streaming rank-2 plan
+        (``swc_stream:sy``) never collides with a pipelined one."""
+        return strategy_sid(
+            self.strategy, self.rank, self.unroll, self.fuse_steps
+        )
 
     def tuning_key(self, backend: str | None = None):
         """The persistent-cache key for this plan's problem identity

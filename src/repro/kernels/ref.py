@@ -84,8 +84,9 @@ def fused_stencil_steps(
 ) -> jnp.ndarray:
     """Sequential reference for temporal fusion: apply the fused op
     ``n_steps`` times, shrinking the valid region by one radius per
-    application (the oracle the halo-widened multi-step kernel must
-    match bit-for-tolerance).
+    application — the oracle BOTH depth-fused Pallas kernels (the
+    halo-widened pipelined ``swc`` kernel and the carried-halo
+    ``swc_stream`` streaming kernel) must match bit-for-tolerance.
 
     ``f_padded`` is padded by ``radius * n_steps`` per axis; ``aux`` (if
     given) by ``radius * (n_steps - 1)``. ``phi`` is one callable (same

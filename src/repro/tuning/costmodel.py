@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.trafficmodel import (
     stencil_hbm_bytes_per_step,
     stencil_redundant_compute_fraction,
+    stencil_stream_hbm_bytes_per_step,
 )
 
 # Conservative per-core VMEM budget (bytes). v4/v5 expose ~16 MiB per
@@ -46,6 +47,10 @@ class Candidate:
     halo_overhead: float  # redundant-fetch fraction vs perfect reuse
     score: float  # structural cost-model score (lower = better)
     fuse_steps: int = 1  # temporal fusion depth of this candidate
+    # True for explicit-streaming (swc_stream) configurations: the
+    # slowest axis is streamed with carried halo planes, so the traffic
+    # and VMEM terms use the streaming model.
+    stream: bool = False
 
 
 # Weight of redundant halo *compute* against saved HBM traffic in the
@@ -63,10 +68,25 @@ def vmem_working_set(
     n_out: int,
     itemsize: int,
     fuse_steps: int = 1,
+    stream: bool = False,
 ) -> int:
-    """VMEM footprint of one pipelined block, any rank. Temporal fusion
-    widens the staged window to ``radii * fuse_steps`` and holds one
-    intermediate field generation on-chip between sweeps."""
+    """VMEM footprint of one block, any rank. Temporal fusion widens
+    the staged window to ``radii * fuse_steps`` and holds one
+    intermediate field generation on-chip between sweeps.
+
+    ``stream=True`` models the explicit-streaming kernel's scratch
+    instead: the working buffer (tile + widened halo on every axis),
+    two prefetch buffers (τ₀ fresh planes × the cross window), and the
+    output staging tile — the shapes ``emit._fused_stream`` allocates.
+    """
+    if stream:
+        work, pf, mid, out = n_f, n_f, n_f if fuse_steps > 1 else 0, n_out
+        for a, (t, r) in enumerate(zip(block, radii)):
+            work *= t + 2 * r * fuse_steps
+            pf *= t if a == 0 else t + 2 * r * fuse_steps
+            mid *= t + 2 * r * (fuse_steps - 1)
+            out *= t
+        return (work + 2 * pf + mid + out) * itemsize
     inp = n_f
     mid = n_f if fuse_steps > 1 else 0
     out = n_out
@@ -113,22 +133,29 @@ def enumerate_candidates_nd(
     vmem_budget: int = VMEM_BUDGET,
     axis_options: Sequence[Sequence[int]] | None = None,
     fuse_steps_options: Sequence[int] = (1,),
+    stream_options: Sequence[bool] = (False,),
 ) -> list[Candidate]:
     """Generate, filter (divisibility + VMEM + the tiny-block guard),
-    and rank (block, fuse_steps) configurations for a rank-1/2/3 domain
-    (the planner's search space — blocks are listed in axis order, x
-    last). ``axis_options`` overrides the per-axis tile bases (same
-    order); ``fuse_steps_options`` widens the sweep to temporal fusion
-    depths, scored jointly with the block shape.
+    and rank (block, fuse_steps, stream) configurations for a
+    rank-1/2/3 domain (the planner's search space — blocks are listed
+    in axis order, x last). ``axis_options`` overrides the per-axis
+    tile bases (same order); ``fuse_steps_options`` widens the sweep to
+    temporal fusion depths, and ``stream_options`` to the explicit-
+    streaming kernel (rank ≥ 2 only — the entry is skipped at rank 1),
+    all scored jointly.
 
     The score is a roofline-flavored sum of the modeled per-step HBM
-    traffic (via ``core.trafficmodel.stencil_hbm_bytes_per_step``,
-    normalized to the compulsory read+write of the interior) and the
-    weighted redundant-halo compute a fused depth re-evaluates, with
-    mild penalties for lane-misaligned x tiles, very small z tiles at
-    rank 3 (pipeline bubble per block), and — at rank 1, where the
-    grid-step count is the only parallel axis — short blocks that don't
-    amortize the per-step pipeline overhead. Lower is better.
+    traffic (via ``core.trafficmodel.stencil_hbm_bytes_per_step``, or
+    its ``stencil_stream_hbm_bytes_per_step`` sibling for streaming
+    candidates — the carried halo planes eliminate the stream-axis halo
+    re-fetch, which is why a streaming candidate can out-score every
+    pipelined block), normalized to the compulsory read+write of the
+    interior, plus the weighted redundant-halo compute a fused depth
+    re-evaluates, with mild penalties for lane-misaligned x tiles, very
+    small stream-axis tiles (per-chunk/pipeline bubble), and — at rank
+    1, where the grid-step count is the only parallel axis — short
+    blocks that don't amortize the per-step pipeline overhead. Lower is
+    better.
     """
     domain = tuple(domain)
     rank = len(domain)
@@ -139,39 +166,56 @@ def enumerate_candidates_nd(
         points *= n
     ideal_bytes = (n_f + n_out) * points * itemsize  # compulsory traffic
     out: list[Candidate] = []
-    for fuse in fuse_steps_options:
-        for raw in itertools.product(*axis_options):
-            blk = []
-            ok = True
-            for n, t in zip(domain, raw):
-                if n % t and t != n:
-                    ok = False
-                    break
-                blk.append(min(t, n))
-            if not ok:
-                continue
-            blk = tuple(blk)
-            ho = halo_overhead(blk, radii, fuse)
-            if not math.isfinite(ho):
-                continue  # tile swallowed by its widened halo
-            vm = vmem_working_set(blk, radii, n_f, n_out, itemsize, fuse)
-            if vm > vmem_budget:
-                continue  # the "failed launch" discard
-            traffic = stencil_hbm_bytes_per_step(
-                domain, blk, radii, n_f, n_out, itemsize, fuse
-            ) / ideal_bytes
-            redundancy = stencil_redundant_compute_fraction(
-                blk, radii, fuse
-            )
-            align_pen = 0.0 if blk[-1] % LANE == 0 else 0.15
-            bubble_pen = 0.05 if rank == 3 and blk[0] < 4 else 0.0
-            step_pen = LANE / blk[-1] if rank == 1 else 0.0
-            score = (
-                traffic * (1.0 + align_pen + bubble_pen + step_pen)
-                + TEMPORAL_COMPUTE_WEIGHT * redundancy
-            )
-            out.append(Candidate(blk, vm, ho, score, fuse))
-    out.sort(key=lambda c: c.score)
+    for stream in stream_options:
+        if stream and rank < 2:
+            continue  # streaming needs a cross-stream tile axis
+        for fuse in fuse_steps_options:
+            for raw in itertools.product(*axis_options):
+                blk = []
+                ok = True
+                for n, t in zip(domain, raw):
+                    if n % t and t != n:
+                        ok = False
+                        break
+                    blk.append(min(t, n))
+                if not ok:
+                    continue
+                blk = tuple(blk)
+                ho = halo_overhead(blk, radii, fuse)
+                if not math.isfinite(ho):
+                    continue  # tile swallowed by its widened halo
+                vm = vmem_working_set(
+                    blk, radii, n_f, n_out, itemsize, fuse, stream
+                )
+                if vm > vmem_budget:
+                    continue  # the "failed launch" discard
+                traffic_fn = (
+                    stencil_stream_hbm_bytes_per_step
+                    if stream
+                    else stencil_hbm_bytes_per_step
+                )
+                traffic = traffic_fn(
+                    domain, blk, radii, n_f, n_out, itemsize, fuse
+                ) / ideal_bytes
+                redundancy = stencil_redundant_compute_fraction(
+                    blk, radii, fuse
+                )
+                align_pen = 0.0 if blk[-1] % LANE == 0 else 0.15
+                bubble_pen = (
+                    0.05
+                    if (rank == 3 or stream) and rank > 1 and blk[0] < 4
+                    else 0.0
+                )
+                step_pen = LANE / blk[-1] if rank == 1 else 0.0
+                score = (
+                    traffic * (1.0 + align_pen + bubble_pen + step_pen)
+                    + TEMPORAL_COMPUTE_WEIGHT * redundancy
+                )
+                out.append(Candidate(blk, vm, ho, score, fuse, stream))
+    # Tie-break equal modeled scores on the smaller VMEM working set
+    # (e.g. a full-extent pipelined tile vs the streaming kernel, whose
+    # carried planes make the same traffic with less residency).
+    out.sort(key=lambda c: (c.score, c.vmem_bytes))
     return out
 
 

@@ -45,6 +45,8 @@ AUTO_ENABLED = False
 
 
 def enable_auto(on: bool = True) -> None:
+    """Globally opt model call sites with no explicit block into
+    ``"auto"`` resolution (the train/serve drivers' ``--auto-tune``)."""
     global AUTO_ENABLED
     AUTO_ENABLED = on
 
@@ -52,7 +54,29 @@ def enable_auto(on: bool = True) -> None:
 @dataclasses.dataclass
 class TuningSession:
     """One tuning context: a cache plus the measurement protocol knobs
-    (paper: 3 timed iterations after warm-up)."""
+    (paper: 3 timed iterations after warm-up).
+
+    Args (dataclass fields):
+        cache: the persistent per-platform :class:`TuningCache` records
+            are read from / written to.
+        top_k: how many structurally-ranked candidates are measured.
+        warmup / iters: per-candidate timing protocol (warm-up calls,
+            then the median of ``iters`` timed calls).
+        record_source: source stamped on measured records ("measured",
+            or "smoke" for degraded single-iteration protocols, which
+            later full-protocol callers are allowed to upgrade).
+
+    Most callers never construct one — ``default_session()`` provides
+    the process-wide instance every ``block="auto"`` site shares.
+
+    Example (an isolated session against a throwaway cache)::
+
+        >>> from repro.tuning.cache import TuningCache
+        >>> from repro.tuning.session import TuningSession
+        >>> sess = TuningSession(cache=TuningCache("/tmp/tune-doc"))
+        >>> sess.top_k
+        4
+    """
 
     cache: TuningCache = dataclasses.field(default_factory=TuningCache)
     top_k: int = 4
@@ -136,6 +160,8 @@ _DEFAULT: TuningSession | None = None
 
 
 def default_session() -> TuningSession:
+    """The process-wide session every ``"auto"`` call site shares;
+    rebuilt when $REPRO_TUNE_CACHE is re-pointed (tests do this)."""
     global _DEFAULT
     from repro.tuning.cache import default_cache_dir
 
@@ -168,18 +194,17 @@ def fused_nd_key(
 ) -> TuningKey:
     """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``).
 
-    ``fuse_steps`` joins the strategy id like the plan's
-    ``strategy_id`` does — depth-1 and depth-2 problems cache
-    separately; the joint block/depth search keys as ``:fauto``.
+    The strategy id — stream axis (``swc_stream`` → ``:sz`` at rank 3,
+    ``:sy`` at rank 2), unroll and ``fuse_steps`` suffixes — comes from
+    the plan layer's canonical ``strategy_sid`` derivation, so this
+    mirror can never diverge from ``StencilPlan.strategy_id``; depth-1
+    and depth-2 problems cache separately and the joint block/depth
+    search keys as ``:fauto``.
     """
+    from repro.kernels.plan import strategy_sid
+
     rank = len(domain)
-    sid = strategy
-    if unroll != 1:
-        sid += f":u{unroll}"
-    if fuse_steps == "auto":
-        sid += ":fauto"
-    elif fuse_steps != 1:
-        sid += f":f{fuse_steps}"
+    sid = strategy_sid(strategy, rank, unroll, fuse_steps)
     return TuningKey(
         kernel=f"fused_stencil{rank}d",
         strategy=sid,
@@ -201,6 +226,7 @@ def fused3d_key(
     strategy: str,
     backend: str | None = None,
 ) -> TuningKey:
+    """Historical rank-3 alias of :func:`fused_nd_key`."""
     return fused_nd_key(domain, radii, n_f, n_out, dtype, strategy, backend)
 
 
@@ -213,21 +239,27 @@ def fused_nd_candidates(
     *,
     vmem_budget: int = VMEM_BUDGET,
     fuse_steps_options: Sequence[int] = (1,),
+    stream: bool = False,
 ) -> list[Candidate]:
     """Structurally-ranked (block, fuse_steps) configurations for a
-    rank-1/2/3 domain, with graceful degradation: if nothing fits the
-    VMEM budget, re-enumerate without the filter and keep only the
-    smallest-footprint shape so ``auto`` still resolves (marked
-    ``fallback`` by the caller)."""
+    rank-1/2/3 domain (``stream=True`` scores every candidate with the
+    explicit-streaming traffic/VMEM model — the ``swc_stream`` search
+    space), with graceful degradation: if nothing fits the VMEM budget,
+    re-enumerate without the filter and keep only the smallest-footprint
+    shape so ``auto`` still resolves (marked ``fallback`` by the
+    caller)."""
+    stream_options = (stream,)
     cands = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=fuse_steps_options,
+        stream_options=stream_options,
     )
     if cands:
         return cands
     unfiltered = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=2**63,
         fuse_steps_options=fuse_steps_options,
+        stream_options=stream_options,
     )
     if not unfiltered:
         return []
@@ -292,6 +324,7 @@ def auto_block_nd(
     cands = fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=(fuse_steps,),
+        stream=probe.strategy == "swc_stream",
     )
     if not cands:  # degenerate domain: let the planner clamp a default
         return DEFAULT_BLOCKS[rank]
@@ -313,7 +346,9 @@ def auto_block_nd(
         from repro.kernels import ops as kops
 
         def measure(cand):
+            """Median seconds for one candidate block (paper protocol)."""
             def fn():
+                """One timed fused-stencil launch at ``cand.block``."""
                 return kops.fused_stencil_nd(
                     f_padded, ops, phi, n_out, aux=aux,
                     block=cand.block, strategy=strategy,
@@ -348,11 +383,14 @@ def auto_fuse_nd(
     Candidates are every (block, depth) pair the traffic-model-driven
     cost model admits (per-depth VMEM filter, tiny-block guard), ranked
     by modeled per-step HBM traffic plus weighted redundant-halo
-    compute. Eager call sites measure the top-k — padding the operand by
-    ``radius · depth`` per candidate so each depth times the kernel it
-    would actually run — and persist the winner under one ``:fauto``
-    key; traced call sites take the cached or structural winner. Returns
-    ``(block, fuse_steps)``.
+    compute; with ``strategy="swc_stream"`` every candidate is scored
+    with the streaming traffic model, so the search can pick a fused
+    streaming configuration. Eager call sites measure the top-k —
+    padding the operand by ``radius · depth`` per candidate so each
+    depth times the kernel it would actually run — and persist the
+    winner under one ``:fauto`` key (stream axis included for streaming
+    plans); traced call sites take the cached or structural winner.
+    Returns ``(block, fuse_steps)``.
 
     Depths that don't self-map (``n_out != n_f + n_aux``) can't fuse;
     only depth 1 is enumerated for them.
@@ -376,6 +414,7 @@ def auto_fuse_nd(
     cands = fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=tuple(depth_options),
+        stream=strategy == "swc_stream",
     )
     if not cands:
         from repro.kernels.plan import DEFAULT_BLOCKS
@@ -396,6 +435,7 @@ def auto_fuse_nd(
         from repro.kernels import ops as kops
 
         def measure(cand):
+            """Median PER-STEP seconds for one (block, depth) pair."""
             depth = cand.fuse_steps
             pad = [(0, 0)] + [(r * depth,) * 2 for r in radii]
             fp = jnp.pad(f_interior, pad, mode="wrap")
@@ -405,6 +445,7 @@ def auto_fuse_nd(
                 aux_p = jnp.pad(aux, apad, mode="wrap")
 
             def fn():
+                """One timed depth-``depth`` launch at ``cand.block``."""
                 return kops.fused_stencil_nd(
                     fp, ops, phi, n_out, aux=aux_p, block=cand.block,
                     strategy=strategy, fuse_steps=depth,
@@ -520,9 +561,11 @@ def auto_block_xcorr1d(
     if _is_concrete(f_padded) and _is_concrete(g):
 
         def measure(cand):
+            """Median seconds for one candidate block length."""
             from repro.kernels import ops as kops
 
             def fn():
+                """One timed xcorr1d call at ``cand.block``."""
                 return kops.xcorr1d(
                     f_padded, g, strategy=strategy,
                     block_size=int(cand.block), unroll=unroll,
@@ -569,9 +612,11 @@ def auto_block_conv1d(
     if _is_concrete(x) and _is_concrete(w):
 
         def measure(cand):
+            """Median seconds for one candidate block length."""
             from repro.kernels import ops as kops
 
             def fn():
+                """One timed depthwise-conv call at ``cand.block``."""
                 return kops.conv1d_depthwise(
                     x, w, activation=activation,
                     block_seq=int(cand.block), interpret=interpret,

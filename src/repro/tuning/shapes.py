@@ -47,6 +47,23 @@ def _warm_diffusion_lowdim(full: bool) -> None:
             op(p.init_field())
 
 
+def _warm_diffusion_stream(full: bool) -> None:
+    """Explicit-streaming plans at both ranks (y-stream at rank 2,
+    z-stream at rank 3), including a fused depth-2 streaming plan —
+    the stream axis and depth are part of the cache key."""
+    from repro.physics.diffusion import DiffusionProblem
+
+    shapes = [
+        ((2048, 2048) if full else (64, 128)),
+        ((128, 128, 128) if full else (16, 16, 64)),
+    ]
+    for shape in shapes:
+        p = DiffusionProblem(shape, accuracy=6)
+        f0 = p.init_field()
+        p.step_op("swc_stream", block="auto")(f0)
+        p.step_op("swc_stream", block="auto", fuse_steps=2)(f0)
+
+
 def _warm_mhd(full: bool) -> None:
     from repro.physics.mhd import MHDSolver
 
@@ -116,6 +133,7 @@ def warm_model_kernels(cfg, batch: int, seq_len: int, dtype=None) -> int:
 REGISTRY: tuple[WarmEntry, ...] = (
     WarmEntry("fig11/diffusion3d_swc", _warm_diffusion3d),
     WarmEntry("fig11/diffusion1d2d_swc", _warm_diffusion_lowdim),
+    WarmEntry("fig11/diffusion_swc_stream", _warm_diffusion_stream),
     WarmEntry("fig13-14/mhd_swc", _warm_mhd),
     WarmEntry("fig13/mhd_swc_stream", _warm_mhd_stream),
     WarmEntry("fig07-09/xcorr1d", _warm_xcorr1d),

@@ -66,12 +66,18 @@ def test_plan_truncates_longer_blocks_x_last():
     assert plan.block == (6, 36)
 
 
-def test_plan_rejects_swc_stream_below_rank3():
+def test_plan_accepts_swc_stream_rank2_rejects_rank1():
+    """swc_stream is a rank-2/3 plan attribute (y-/z-streaming); rank 1
+    has no cross-stream tile axis and is rejected up front."""
     opset, _, f = _problem(2, jnp.float32)
-    with pytest.raises(ValueError, match="rank-3"):
-        plan_stencil(opset, f.shape, 1, strategy="swc_stream")
+    plan = plan_stencil(opset, f.shape, 1, strategy="swc_stream")
+    assert plan.stream_axis == 0 and plan.stream_axis_letter == "y"
+    assert plan.strategy_id.startswith("swc_stream:sy")
+    opset1, _, f1 = _problem(1, jnp.float32)
+    with pytest.raises(ValueError, match="rank 2"):
+        plan_stencil(opset1, f1.shape, 1, strategy="swc_stream")
     with pytest.raises(ValueError, match="swc_stream"):
-        FusedStencilOp(opset, lambda d: d["val"], 1, strategy="swc_stream")
+        FusedStencilOp(opset1, lambda d: d["val"], 1, strategy="swc_stream")
 
 
 def test_plan_unroll_degrades_when_not_divisible():

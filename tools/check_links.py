@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link checker (stdlib only — the CI docs job).
+
+Scans the given markdown files/directories for ``[text](target)``
+links and reference-style ``[text]: target`` definitions, and fails
+(exit 1) when a relative target does not exist on disk. External
+schemes (http/https/mailto) and pure in-page anchors (``#…``) are
+skipped; a ``path#anchor`` target is checked for the path part only.
+
+Usage:
+    python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline [text](target) — target up to the first unescaped ')' — plus
+# reference definitions "[label]: target" at line start.
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(paths: list[str]) -> list[Path]:
+    """Expand files/directories into the markdown files to scan."""
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.md")))
+        elif path.exists():
+            out.append(path)
+        else:
+            print(f"check_links: no such file or directory: {p}")
+            sys.exit(2)
+    return out
+
+
+def check_file(md: Path) -> list[str]:
+    """Broken-link messages for one markdown file."""
+    text = md.read_text(encoding="utf-8")
+    errors = []
+    targets = INLINE.findall(text) + REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        resolved = (md.parent / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every argument (file or directory); 0 iff no broken links."""
+    files = md_files(argv or ["README.md", "docs"])
+    errors = [e for md in files for e in check_file(md)]
+    for e in errors:
+        print(e)
+    print(
+        f"check_links: {len(files)} file(s), "
+        f"{len(errors)} broken link(s)"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
