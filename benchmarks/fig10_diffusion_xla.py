@@ -1,6 +1,12 @@
 """Paper Fig. 10: diffusion equation via tensor-library primitives (the
 PyTorch-path analogue): XLA's conv_general_dilated in 1/2/3-D, radius
-sweep — the "transfer the tuning burden to the library" strategy."""
+sweep — the "transfer the tuning burden to the library" strategy.
+
+Rows carry the HBM roofline bound (``tpu_bw_bound_s``), so the library
+baseline lands in the consolidated ``BENCH_summary.json`` next to the
+fused-engine strategies — the measured analogue of the hwc
+modeled-traffic floor the cross-strategy ``"auto"`` search competes
+against."""
 from __future__ import annotations
 
 import jax
@@ -8,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import emit, time_fn
+from repro.core.rooflinelib import TPU_V5E
 from repro.core.stencil import central_difference_coeffs
 
 
@@ -51,7 +58,9 @@ def run(full: bool = False, dims: tuple[int, ...] = (1, 2, 3)) -> None:
             jitted = jax.jit(lambda f, g, nd=ndim: _conv_nd(f, g, nd))
             t = time_fn(jitted, fp, g, iters=3)
             n = int(np.prod(shape))
+            roof = 2 * n * 4 / TPU_V5E.hbm_bw  # compulsory f32 r+w
             emit(
                 f"fig10/diffusion_library/{ndim}d_r{r}", t,
-                f"Mupdates_per_s={n / t / 1e6:.1f}",
+                f"Mupdates_per_s={n / t / 1e6:.1f};"
+                f"tpu_bw_bound_s={roof:.2e}",
             )

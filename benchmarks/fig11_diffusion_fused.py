@@ -15,6 +15,13 @@ The ``--strategies`` driver flag widens the strategy sweep — e.g.
 ``--strategies swc_stream`` benchmarks the explicit-streaming kernel
 (y-streaming at rank 2, z-streaming at rank 3; skipped at rank 1,
 which has no cross-stream axis), composing with ``--fuse-steps``.
+
+``--strategies auto`` benchmarks ``strategy="auto"``: the
+cross-strategy tuning search picks the caching regime (hwc vs swc vs
+swc_stream) jointly with block/depth/stream, and the row's derived
+column reports which regime won (``auto_strategy=...``,
+``auto_depth=...``) so the decision lands in ``BENCH_summary.json``
+per shape.
 """
 from __future__ import annotations
 
@@ -52,7 +59,28 @@ def run(
                 if strat == "swc_stream" and ndim < 2:
                     continue  # streaming needs a cross-stream axis
                 tuned = ""
-                if strat in ("swc", "swc_stream"):
+                steps_run = fuse_steps
+                if strat == "auto":
+                    # Cross-strategy resolution: --fuse-steps 1 opens
+                    # the full joint (strategy, block, depth, stream)
+                    # search; an explicit depth pins the depth axis.
+                    fs = "auto" if fuse_steps == 1 else fuse_steps
+                    op = p.step_op("auto", fuse_steps=fs)
+                    rop = op.resolved(f0)  # eager: tune-and-persist
+                    rec = lookup_fused_nd(
+                        f0, op.ops, 1, "auto", fuse_steps=fs
+                    )
+                    if rec is not None:
+                        chosen = rec.resolved_strategy
+                        tuned = (
+                            f";auto_strategy={chosen}"
+                            f";auto_depth={rec.fuse_steps}"
+                            f";tuned_block={format_block(rec.block)}"
+                            f";tuned_src={rec.source}"
+                        )
+                    op = rop
+                    steps_run = int(rop.fuse_steps)
+                elif strat in ("swc", "swc_stream"):
                     op = p.step_op(strat, block="auto", fuse_steps=fuse_steps)
                     op(f0)  # eager: tune-and-persist on a cache miss
                     rec = lookup_fused_nd(
@@ -73,7 +101,7 @@ def run(
                 else:
                     op = p.step_op(strat, fuse_steps=fuse_steps)
                 jitted = jax.jit(op)
-                t = time_fn(jitted, f0, iters=3) / fuse_steps
+                t = time_fn(jitted, f0, iters=3) / steps_run
                 emit(
                     f"fig11/diffusion_fused/{ndim}d_r{p.radius}"
                     f"_{strat}{suffix}", t,

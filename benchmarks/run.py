@@ -103,11 +103,18 @@ def summarize_rows(rows) -> dict:
             gbps = float(derived["measured_GBps"])
         else:
             gbps = fraction * TPU_V5E.hbm_bw / 1e9
-        kernels[row["name"]] = {
+        entry = {
             "us_per_call": row["us_per_call"],
             "gbps": round(gbps, 3),
             "roofline_fraction": round(fraction, 6),
         }
+        # Cross-strategy "auto" rows report which caching regime the
+        # tuning search picked for this shape — forward the decision so
+        # the consolidated summary records it per kernel.
+        for k in ("auto_strategy", "auto_depth", "tuned_block"):
+            if k in derived:
+                entry[k] = derived[k]
+        kernels[row["name"]] = entry
     return kernels
 
 
@@ -165,8 +172,11 @@ def main() -> None:
     ap.add_argument("--strategies", default=None, metavar="S[,S...]",
                     help="restrict/widen the caching-strategy sweep for "
                          "modules that take one (fig11), e.g. "
-                         "--strategies swc_stream or --strategies "
-                         "hwc,swc,swc_stream (default: hwc,swc)")
+                         "--strategies swc_stream, --strategies auto "
+                         "(cross-strategy tuning search; the chosen "
+                         "regime is reported per shape), or "
+                         "--strategies hwc,swc,swc_stream "
+                         "(default: hwc,swc)")
     args = ap.parse_args()
     if args.fuse_steps < 1:
         ap.error("--fuse-steps must be >= 1")
@@ -185,10 +195,14 @@ def main() -> None:
         strategies = tuple(
             s.strip() for s in args.strategies.split(",") if s.strip()
         )
-        bad = [s for s in strategies if s not in ("hwc", "swc", "swc_stream")]
+        bad = [
+            s for s in strategies
+            if s not in ("hwc", "swc", "swc_stream", "auto")
+        ]
         if not strategies or bad:
             ap.error(
-                "--strategies entries must be in {hwc, swc, swc_stream}"
+                "--strategies entries must be in "
+                "{hwc, swc, swc_stream, auto}"
             )
     header()
     for name in MODULES:

@@ -29,18 +29,21 @@ def stencil_demo():
     from repro.physics.mhd import MHDSolver
 
     solver_hwc = MHDSolver((16, 16, 16), strategy="hwc")
-    # block="auto": the persistent autotuner (repro.tuning) picks the
-    # Pallas block — cache hit under ~/.cache/repro-tune (or
-    # $REPRO_TUNE_CACHE), measured rank-search on first use. Run
-    # `python -m repro.tuning show` to see the recorded timing tables.
-    solver_swc = MHDSolver((16, 16, 16), strategy="swc", block="auto")
+    # strategy="auto": the persistent autotuner (repro.tuning) picks the
+    # whole caching regime — hwc (XLA-managed) vs swc (Pallas VMEM
+    # blocks) vs swc_stream — jointly with the block, measured on first
+    # use and cached under ~/.cache/repro-tune (or $REPRO_TUNE_CACHE).
+    # Run `python -m repro.tuning show` to see the recorded tables.
+    solver_auto = MHDSolver((16, 16, 16), strategy="auto")
     f = solver_hwc.init_smooth(seed=0, amplitude=1e-2, dtype=jnp.float32)
     r1 = solver_hwc.rhs(f)
-    r2 = solver_swc.rhs(f)
+    r2 = solver_auto.rhs(f)
     err = float(jnp.abs(r1 - r2).max())
+    rop = solver_auto.rhs_op().resolved(f)  # warm cache hit
     print(f"  8-field MHD RHS, 10 operators, 127 taps fused in one kernel")
-    print(f"  XLA-managed (HWC) vs Pallas VMEM (SWC, auto-tuned block) "
-          f"max diff: {err:.2e}")
+    print(f"  strategy='auto' resolved to {rop.strategy!r} "
+          f"(block={rop.block}, depth={rop.fuse_steps})")
+    print(f"  XLA-managed (HWC) vs auto-tuned strategy max diff: {err:.2e}")
     dt = float(solver_hwc.cfl_dt(f))
     f1 = solver_hwc.step(f, dt)
     print(f"  one RK3 step (dt={dt:.3f}): max|Δf| = "

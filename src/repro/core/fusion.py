@@ -41,6 +41,20 @@ write the field stack back to HBM — redundant halo compute traded for
 memory traffic (classic temporal blocking). ``fuse_steps="auto"``
 resolves the depth jointly with the block through the tuning
 subsystem's traffic-model-driven search.
+
+``strategy="auto"`` closes the loop over the caching regimes
+themselves (the paper's central finding: no single regime wins
+everywhere, "necessitating platform-specific tuning"): resolution
+consults the tuning subsystem's cross-strategy search, which scores
+``hwc`` (the measured XLA baseline, modeled at the compulsory-traffic
+floor), ``swc``, and ``swc_stream`` candidates jointly over
+``(block, fuse_steps, stream)`` and persists the whole decision —
+strategy, stream axis, block, and depth — in one schema-v2 tuning
+record, reproduced exactly on warm cache hits and under jit tracing
+(structural winner, no measurement). ``strategy="auto"`` owns the
+block (``block="auto"``, coerced from ``None``) and composes with
+``fuse_steps`` being an int (strategy/block search at that depth) or
+``"auto"`` (the full joint search).
 """
 from __future__ import annotations
 
@@ -60,7 +74,7 @@ Phi = Callable[[Mapping[str, jnp.ndarray]], jnp.ndarray]
 # One callable (applied every fused step) or one per fused step.
 PhiLike = Union[Phi, tuple]
 
-STRATEGIES = ("hwc", "swc", "swc_stream")
+STRATEGIES = ("hwc", "swc", "swc_stream", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,10 +89,13 @@ class FusedStencilOp:
             a sequence of ``fuse_steps`` per-sweep callables.
         n_out: number of output fields φ produces.
         boundary_mode: ψ — how ghost cells are filled ("periodic", …).
-        strategy: caching regime — "hwc", "swc" or "swc_stream" (see the
-            module docstring table).
+        strategy: caching regime — "hwc", "swc", "swc_stream", or
+            "auto" (the cross-strategy tuning search picks the regime,
+            block, depth and stream axis jointly and persists them in
+            one record; see the module docstring).
         block: rank-length tile (x last), ``"auto"`` (persistent tuning
-            cache), or None (per-rank default).
+            cache), or None (per-rank default; coerced to ``"auto"``
+            under ``strategy="auto"``, which owns the block).
         fuse_steps: temporal-fusion depth (int ≥ 1, or ``"auto"`` for
             the joint block/depth search).
 
@@ -130,6 +147,17 @@ class FusedStencilOp:
                 f"requires a 2-D or 3-D operator set; got "
                 f"ndim={self.ops.ndim} — use strategy='swc'"
             )
+        if self.strategy == "auto":
+            # The cross-strategy search owns the block: None is coerced
+            # to "auto", an explicit tile is contradictory.
+            if self.block is None:
+                object.__setattr__(self, "block", "auto")
+            elif self.block != "auto":
+                raise ValueError(
+                    "strategy='auto' resolves the block through the "
+                    "cross-strategy tuning search — pass block='auto' "
+                    f"(or None), not {self.block!r}"
+                )
         if isinstance(self.block, str) and self.block != "auto":
             raise ValueError(
                 f"block must be a rank-length tuple, 'auto', or None, "
@@ -141,13 +169,14 @@ class FusedStencilOp:
                     f"fuse_steps must be an int >= 1 or 'auto', got "
                     f"{self.fuse_steps!r}"
                 )
-            if self.strategy not in ("swc", "swc_stream") or (
+            if self.strategy not in ("swc", "swc_stream", "auto") or (
                 self.block != "auto"
             ):
                 raise ValueError(
                     "fuse_steps='auto' resolves through the joint "
                     "(block, depth) tuning search — it requires "
-                    "strategy='swc' or 'swc_stream' and block='auto'"
+                    "strategy='swc', 'swc_stream' or 'auto' and "
+                    "block='auto'"
                 )
         elif self.fuse_steps < 1:
             raise ValueError(
@@ -181,6 +210,12 @@ class FusedStencilOp:
         return None if self.fuse_steps == "auto" else int(self.fuse_steps)
 
     @property
+    def needs_resolution(self) -> bool:
+        """True while any lowering decision (strategy or depth) is still
+        ``"auto"`` — ``resolved()`` turns such an op concrete."""
+        return self.strategy == "auto" or self.fuse_steps == "auto"
+
+    @property
     def radius_per_axis(self) -> tuple[int, ...]:
         """Per-axis halo radius of the operator set (ghost cells one
         un-fused application consumes on each side)."""
@@ -191,13 +226,30 @@ class FusedStencilOp:
     def resolved(
         self, f: jnp.ndarray, aux: jnp.ndarray | None = None
     ) -> "FusedStencilOp":
-        """An equivalent op with a concrete fusion depth.
+        """An equivalent, fully concrete op — the resolution contract.
 
-        A no-op unless ``fuse_steps="auto"``, in which case the tuning
-        subsystem resolves (block, depth) jointly for the *unpadded*
-        field stack ``f`` — measured on a cache miss when eager, the
-        traffic-model winner under jit tracing.
+        A no-op when nothing is ``"auto"``. With ``strategy="auto"``
+        the cross-strategy search resolves (strategy, block, depth,
+        stream) in one pass for the *unpadded* field stack ``f`` and the
+        returned op carries all four (the stream axis is implied by the
+        resolved strategy); with only ``fuse_steps="auto"`` the
+        per-strategy joint (block, depth) search runs. Either way:
+        measured on a cache miss when eager, replayed from the
+        persistent record on a warm hit, the traffic-model winner under
+        jit tracing — so the returned op is bit-identical across a
+        cold-measure → cache-write → warm-hit cycle.
         """
+        if self.strategy == "auto":
+            from repro.tuning.session import auto_strategy_nd
+
+            strategy, block, depth = auto_strategy_nd(
+                f, self.ops, self.phi, self.n_out, aux=aux,
+                fuse_steps=self.fuse_steps,
+            )
+            return dataclasses.replace(
+                self, strategy=strategy, block=tuple(block),
+                fuse_steps=int(depth),
+            )
         if self.fuse_steps != "auto":
             return self
         from repro.tuning.session import auto_fuse_nd
@@ -221,11 +273,11 @@ class FusedStencilOp:
         depth 1, padded by ``radius * (fuse_steps - 1)`` at depth > 1 so
         intermediate sweeps see an aligned carry."""
         depth = self._depth_or_none()
-        if depth is None:
+        if depth is None or self.strategy == "auto":
             raise ValueError(
-                "apply_padded needs a concrete fuse_steps (the ghost-"
-                "cell width depends on it) — resolve via "
-                "op.resolved(f)(f) or __call__"
+                "apply_padded needs a concrete strategy and fuse_steps "
+                "(the kernel and its ghost-cell width depend on them) "
+                "— resolve via op.resolved(f)(f) or __call__"
             )
         if self.strategy in ("swc", "swc_stream"):
             return kops.fused_stencil_nd(
@@ -248,7 +300,7 @@ class FusedStencilOp:
     ) -> jnp.ndarray:
         """ψ then φ(A·B): pad with the boundary function and apply —
         advancing ``fuse_steps`` time steps per call."""
-        if self.fuse_steps == "auto":
+        if self.needs_resolution:
             return self.resolved(f, aux)(f, aux)
         depth = int(self.fuse_steps)
         rads = self.radius_per_axis
@@ -324,7 +376,7 @@ class FusedStencilOp:
         the dependent edge slabs (with their ``radius * (fuse_steps-1)``
         aux windows) are computed from the exchanged array afterwards.
         """
-        if self.fuse_steps == "auto":
+        if self.needs_resolution:
             return self.resolved(f_local, aux).apply_sharded(
                 f_local, mesh_axes, aux, overlap=overlap
             )
@@ -472,7 +524,13 @@ def integrate(
     With temporal fusion each scan iteration advances ``op.fuse_steps``
     steps in one kernel; a remainder ``n_steps % fuse_steps`` is
     finished with a shallower op so the step count is exact.
-    ``fuse_steps="auto"`` is resolved once, up front, against ``f0``.
+    ``fuse_steps="auto"`` (and ``strategy="auto"``) is resolved once,
+    up front, against ``f0`` — except the remainder launch, which does
+    NOT reuse the block tuned for the full depth: when the caller asked
+    for ``block="auto"``, the depth-``rem`` op resolves through its own
+    tuning key (a depth-``S`` winner is generally mistuned at depth
+    ``rem`` — the halo, VMEM window, and traffic model all change with
+    the depth). An explicit block is reused as given.
 
     Args:
         op: the fused update to iterate (one uniform φ — per-step φ
@@ -496,6 +554,7 @@ def integrate(
         >>> out.shape
         (1, 16, 32)
     """
+    requested_block = op.block  # before resolution concretizes it
     op = op.resolved(f0)
     depth = int(op.fuse_steps)
     if depth > 1 and isinstance(op.phi, (tuple, list)):
@@ -511,5 +570,12 @@ def integrate(
 
     out, _ = jax.lax.scan(body, f0, None, length=full)
     if rem:
-        out = dataclasses.replace(op, fuse_steps=rem)(out)
+        # The remainder runs at depth `rem`, not depth `S`: give it back
+        # the caller's "auto" block so it resolves under its own
+        # depth-`rem` tuning key instead of inheriting the depth-`S`
+        # winner (an explicit block is reused as documented above).
+        rem_block = "auto" if requested_block == "auto" else op.block
+        out = dataclasses.replace(
+            op, fuse_steps=rem, block=rem_block
+        )(out)
     return out

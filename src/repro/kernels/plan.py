@@ -67,11 +67,15 @@ def strategy_sid(
     key mirror (``repro.tuning.session.fused_nd_key``), so the two can
     never silently derive different cache ids. ``fuse_steps`` may be
     the string ``"auto"`` (the joint block/depth search's ``:fauto``
-    suffix).
+    suffix). ``strategy`` may be ``"auto"`` (the cross-strategy search,
+    which also owns the stream-axis decision — keyed ``:sauto``, so an
+    auto record never collides with a per-strategy one).
     """
     sid = strategy
     if strategy == "swc_stream":
         sid += f":s{AXIS_LETTERS[rank][0]}"
+    elif strategy == "auto":
+        sid += ":sauto"
     if unroll != 1:
         sid += f":u{unroll}"
     if fuse_steps == "auto":
@@ -180,6 +184,19 @@ class StencilPlan:
                     f"n_f={self.n_f}, n_aux={self.n_aux}) so each "
                     "in-kernel sweep can feed the next"
                 )
+            if self.strategy == "swc_stream":
+                carried = 2 * self.radii[0] * self.fuse_steps
+                if self.interior[0] < carried + self.block[0]:
+                    raise ValueError(
+                        "swc_stream with temporal fusion walks the "
+                        "stream axis carrying 2·r·fuse_steps halo "
+                        f"planes ({carried} here), so the stream-axis "
+                        f"extent must hold that carried halo plus one "
+                        f"chunk (block[0]={self.block[0]}); got extent "
+                        f"{self.interior[0]} < {carried + self.block[0]}"
+                        " — shrink fuse_steps/block[0], grow the "
+                        "domain, or use strategy='swc'"
+                    )
         step = self.x_step
         for a in range(self.rank):
             t = self.block[a] if a < self.rank - 1 else step
@@ -321,6 +338,16 @@ def plan_stencil(
     clamped = [
         largest_divisor_leq(interior[a], block[a]) for a in range(rank - 1)
     ]
+    if strategy == "swc_stream" and fuse_steps > 1 and clamped:
+        # The fused stream chunk must leave room for the carried halo
+        # (2·r·S planes) on the stream axis: shrink the chunk when a
+        # smaller divisor fits, and otherwise leave the block for
+        # StencilPlan validation to reject with the clear error.
+        cap = interior[0] - 2 * radii[0] * fuse_steps
+        if cap >= 1:
+            clamped[0] = largest_divisor_leq(
+                interior[0], min(clamped[0], cap)
+            )
     nx = interior[-1]
     if unroll > 1 and nx % unroll == 0:
         tx = largest_divisor_leq(nx // unroll, block[-1])
@@ -341,4 +368,40 @@ def plan_stencil(
         n_aux=int(n_aux),
         unroll=int(unroll),
         fuse_steps=int(fuse_steps),
+    )
+
+
+def plan_from_record(
+    ops: OperatorSet,
+    interior_shape: Sequence[int],
+    n_out: int,
+    record,
+    *,
+    dtype: str = "float32",
+    n_aux: int = 0,
+) -> StencilPlan | None:
+    """Reconstruct the :class:`StencilPlan` a resolved tuning record
+    lowers to — the warm-cache side of the ``strategy="auto"`` contract.
+
+    ``interior_shape`` is the UNPADDED (n_f, *spatial) operand shape and
+    ``record`` a :class:`~repro.tuning.cache.TuningRecord` whose
+    ``strategy_resolved``/``stream``/``block``/``fuse_steps`` fields
+    were persisted by the cross-strategy search. Returns ``None`` for a
+    record that resolved to ``hwc`` (the compiler-managed path has no
+    Pallas plan); otherwise the plan is built exactly as the kernel
+    dispatch would build it, so ``plan.strategy_id``/``tuning_key()``
+    round-trip the decision.
+    """
+    strategy = record.resolved_strategy
+    if strategy == "hwc":
+        return None
+    depth = int(record.fuse_steps)
+    radii = ops.radius_per_axis()
+    padded = tuple(interior_shape[:1]) + tuple(
+        n + 2 * r * depth for n, r in zip(interior_shape[1:], radii)
+    )
+    return plan_stencil(
+        ops, padded, n_out, strategy=strategy,
+        block=tuple(record.block), dtype=dtype, n_aux=n_aux,
+        fuse_steps=depth,
     )

@@ -66,12 +66,15 @@ class DiffusionProblem:
         """One forward-Euler step as a fused op. ``strategy="swc"``
         lowers through the rank-generic engine at any dimensionality
         (1-D/2-D/3-D) and ``strategy="swc_stream"`` through the
-        explicit-streaming kernel (2-D/3-D); ``block`` is a rank-length
-        tile, ``"auto"`` for the persistent tuning cache, or None for
-        the per-rank default. ``fuse_steps`` is the temporal-fusion
-        depth (each op call then advances that many Euler steps in one
-        kernel, streamed or pipelined); ``"auto"`` resolves block and
-        depth jointly from the traffic model.
+        explicit-streaming kernel (2-D/3-D); ``strategy="auto"`` lets
+        the cross-strategy tuning search pick the caching regime itself
+        (hwc vs swc vs swc_stream, jointly with block/depth/stream —
+        ``block`` defaults to ``"auto"`` in that case). ``block`` is a
+        rank-length tile, ``"auto"`` for the persistent tuning cache,
+        or None for the per-rank default. ``fuse_steps`` is the
+        temporal-fusion depth (each op call then advances that many
+        Euler steps in one kernel, streamed or pipelined); ``"auto"``
+        resolves block and depth jointly from the traffic model.
         """
         spec = dataclasses.replace(self.merged_stencil(), name="step")  # type: ignore[arg-type]
         ops = OperatorSet((spec,))

@@ -226,7 +226,14 @@ def mhd_rhs_phi(params: MHDParams):
 @dataclasses.dataclass(frozen=True)
 class MHDSolver:
     """Fused-stencil MHD integrator over a periodic (n, n, n) box of
-    extent 2π (paper Table B2: Δs = 2π, one full period per axis)."""
+    extent 2π (paper Table B2: Δs = 2π, one full period per axis).
+
+    ``strategy="auto"`` hands the caching-regime choice to the
+    cross-strategy tuning search (the ``block`` default is then ignored
+    — the search owns the block). The RHS op is a shape-level self-map
+    (n_out == n_f) but NOT a time-step, so depth stays pinned at 1:
+    only strategy and block are searched.
+    """
 
     shape: tuple[int, int, int]
     params: MHDParams = MHDParams()
@@ -249,6 +256,13 @@ class MHDSolver:
     def operator_set(self) -> OperatorSet:
         return derivative_operator_set(3, self.accuracy, self.spacing)
 
+    @property
+    def op_block(self) -> tuple[int, int, int] | str:
+        """Block forwarded to the fused ops: ``strategy="auto"`` owns
+        the block (the cross-strategy search resolves it), so the
+        class-default tile is overridden to ``"auto"`` there."""
+        return "auto" if self.strategy == "auto" else self.block
+
     def rhs_op(self) -> FusedStencilOp:
         return FusedStencilOp(
             ops=self.operator_set,
@@ -256,7 +270,7 @@ class MHDSolver:
             n_out=N_FIELDS,
             boundary_mode="periodic",
             strategy=self.strategy,
-            block=self.block,
+            block=self.op_block,
         )
 
     def _substep_phi(self, alpha: float, beta: float, dt):
@@ -284,7 +298,7 @@ class MHDSolver:
             n_out=2 * N_FIELDS,
             boundary_mode="periodic",
             strategy=self.strategy,
-            block=self.block,
+            block=self.op_block,
         )
 
     def _fused_pair_op(self, dt) -> FusedStencilOp:
@@ -300,7 +314,7 @@ class MHDSolver:
             n_out=2 * N_FIELDS,
             boundary_mode="periodic",
             strategy=self.strategy,
-            block=self.block,
+            block=self.op_block,
             fuse_steps=2,
         )
 

@@ -18,6 +18,7 @@ from repro.tuning.cache import (  # noqa: F401
     TuningCache,
     TuningKey,
     TuningRecord,
+    candidate_label,
     current_backend,
     default_cache_dir,
     format_block,
@@ -34,7 +35,9 @@ from repro.tuning.costmodel import (  # noqa: F401
     enumerate_candidates,
     enumerate_candidates_1d,
     enumerate_candidates_nd,
+    enumerate_cross_strategy_nd,
     halo_overhead,
+    hwc_candidate,
     time_candidate,
     vmem_working_set,
 )
@@ -46,6 +49,7 @@ from repro.tuning.session import (  # noqa: F401
     auto_block_nd,
     auto_block_xcorr1d,
     auto_fuse_nd,
+    auto_strategy_nd,
     default_session,
     enable_auto,
     fused3d_candidates,

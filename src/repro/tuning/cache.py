@@ -29,7 +29,11 @@ try:
 except ImportError:  # non-posix: fall back to lock-free merge
     fcntl = None
 
-SCHEMA_VERSION = 1
+# v2: records gained ``stream`` + ``strategy_resolved`` (the explicit-
+# streaming flag and the strategy a cross-strategy "auto" search picked
+# were previously dropped on the warm-cache path). Migration is by
+# invalidation: v1 records are dropped at load and re-tuned.
+SCHEMA_VERSION = 2
 ENV_VAR = "REPRO_TUNE_CACHE"
 
 Block = Union[int, tuple]
@@ -85,10 +89,17 @@ class TuningKey:
 
 @dataclasses.dataclass
 class TuningRecord:
-    """One tuning outcome: the winning block (plus, for joint
-    block/depth searches, the winning temporal-fusion depth) and the
-    full timing table (µs per call, keyed by the block's string form)
-    for inspection."""
+    """One tuning outcome: the winning block (plus, for joint searches,
+    the winning temporal-fusion depth, explicit-streaming flag, and —
+    for cross-strategy ``"auto"`` keys — the resolved strategy) and the
+    full timing table (µs per call, keyed by the candidate's string
+    form) for inspection.
+
+    ``stream``/``strategy_resolved`` are what a warm cache hit needs to
+    reproduce the full lowering decision without re-measuring: before
+    schema v2 the streaming flag lived only in the candidate object and
+    was silently dropped on the persisted path.
+    """
 
     block: Block
     timings_us: dict[str, float]
@@ -96,6 +107,12 @@ class TuningRecord:
     schema: int = SCHEMA_VERSION
     created: float = 0.0  # unix timestamp
     fuse_steps: int = 1  # winning temporal depth (1 for pure-block keys)
+    stream: bool = False  # winning explicit-streaming flag (swc_stream)
+    # Strategy the winning candidate lowers through ("hwc" | "swc" |
+    # "swc_stream") — load-bearing for cross-strategy "auto" keys,
+    # informational for per-strategy keys (where the key pins it), and
+    # empty for the 1-D kernels whose candidates carry no strategy.
+    strategy_resolved: str = ""
 
     def to_json(self) -> dict:
         blk = list(self.block) if isinstance(self.block, tuple) else self.block
@@ -106,6 +123,8 @@ class TuningRecord:
             "schema": self.schema,
             "created": self.created,
             "fuse_steps": self.fuse_steps,
+            "stream": self.stream,
+            "strategy_resolved": self.strategy_resolved,
         }
 
     @classmethod
@@ -120,6 +139,28 @@ class TuningRecord:
             schema=int(d.get("schema", -1)),
             created=float(d.get("created", 0.0)),
             fuse_steps=int(d.get("fuse_steps", 1)),
+            stream=bool(d.get("stream", False)),
+            strategy_resolved=str(d.get("strategy_resolved", "")),
+        )
+
+    @property
+    def resolved_strategy(self) -> str:
+        """Concrete strategy this record lowers to — the ONE place the
+        empty-``strategy_resolved`` fallback lives (records written by
+        strategy-less searches imply ``swc``/``swc_stream`` from the
+        stream flag)."""
+        return self.strategy_resolved or (
+            "swc_stream" if self.stream else "swc"
+        )
+
+    @property
+    def winner_label(self) -> str:
+        """Label of the winning candidate in :attr:`timings_us` —
+        derived by the same :func:`candidate_label` the measurement
+        loop writes, so display code can mark the winner row."""
+        return candidate_label(
+            self.block, self.fuse_steps, self.stream,
+            self.strategy_resolved,
         )
 
 
@@ -127,6 +168,27 @@ def format_block(block: Block) -> str:
     if isinstance(block, tuple):
         return "x".join(map(str, block))
     return str(block)
+
+
+def candidate_label(
+    block: Block,
+    fuse_steps: int = 1,
+    stream: bool = False,
+    strategy: str = "",
+) -> str:
+    """Timing-table label for one tuning candidate/record: the block,
+    suffixed with the temporal depth when a joint search mixes depths
+    and the stream marker when it mixes strategies (a pipelined and a
+    streamed candidate may share a block); ``hwc`` for the compiler-
+    managed baseline, which has no meaningful block."""
+    if strategy == "hwc":
+        return "hwc"
+    label = format_block(block)
+    if fuse_steps != 1:
+        label += f"@f{fuse_steps}"
+    if stream:
+        label += ":s"
+    return label
 
 
 class TuningCache:

@@ -58,13 +58,14 @@ def _show_records(records) -> None:
         rec = records[key]
         print(f"\n{key}")
         depth = f" @f{rec.fuse_steps}" if rec.fuse_steps != 1 else ""
+        strat = (
+            f" -> {rec.strategy_resolved}" if rec.strategy_resolved else ""
+        )
         print(
-            f"  best block: {format_block(rec.block)}{depth}  "
+            f"  best block: {format_block(rec.block)}{depth}{strat}  "
             f"[{rec.source}]"
         )
-        winner = format_block(rec.block) + (
-            f"@f{rec.fuse_steps}" if rec.fuse_steps != 1 else ""
-        )
+        winner = rec.winner_label
         for blk, us in sorted(rec.timings_us.items(), key=lambda kv: kv[1]):
             mark = " <-- winner" if blk == winner else ""
             print(f"    {blk:>16s}  {us:12.1f} us{mark}")

@@ -51,6 +51,10 @@ class Candidate:
     # slowest axis is streamed with carried halo planes, so the traffic
     # and VMEM terms use the streaming model.
     stream: bool = False
+    # Caching regime this candidate lowers through ("hwc" | "swc" |
+    # "swc_stream") — the cross-strategy "auto" search mixes all three
+    # in one ranked space, and the tuning record persists the winner.
+    strategy: str = "swc"
 
 
 # Weight of redundant halo *compute* against saved HBM traffic in the
@@ -181,6 +185,13 @@ def enumerate_candidates_nd(
                 if not ok:
                     continue
                 blk = tuple(blk)
+                if stream and fuse > 1 and (
+                    domain[0] < 2 * radii[0] * fuse + blk[0]
+                ):
+                    # The fused stream walk needs the stream-axis extent
+                    # to hold the carried halo (2·r·S planes) plus one
+                    # chunk — the same bound StencilPlan validates.
+                    continue
                 ho = halo_overhead(blk, radii, fuse)
                 if not math.isfinite(ho):
                     continue  # tile swallowed by its widened halo
@@ -211,10 +222,75 @@ def enumerate_candidates_nd(
                     traffic * (1.0 + align_pen + bubble_pen + step_pen)
                     + TEMPORAL_COMPUTE_WEIGHT * redundancy
                 )
-                out.append(Candidate(blk, vm, ho, score, fuse, stream))
+                out.append(
+                    Candidate(
+                        blk, vm, ho, score, fuse, stream,
+                        strategy="swc_stream" if stream else "swc",
+                    )
+                )
     # Tie-break equal modeled scores on the smaller VMEM working set
     # (e.g. a full-extent pipelined tile vs the streaming kernel, whose
     # carried planes make the same traffic with less residency).
+    out.sort(key=lambda c: (c.score, c.vmem_bytes))
+    return out
+
+
+def hwc_candidate(
+    domain: Sequence[int],
+    fuse_steps: int = 1,
+) -> Candidate:
+    """The hardware-managed-caching baseline as a tuning candidate.
+
+    ``hwc`` stages nothing itself — XLA owns on-chip residency — so it
+    is modeled at the compulsory-traffic *floor*: one read of every
+    input field plus one write of every output per step, normalized
+    score exactly 1.0 with no VMEM footprint. A ``swc``/``swc_stream``
+    candidate therefore only out-ranks it structurally when temporal
+    fusion (or streaming) models *less* than the compulsory per-step
+    traffic; on an eager resolution the measured XLA baseline competes
+    on real time instead. The block is the per-rank default clamped to
+    the domain — the hwc path ignores it, but the record round-trips a
+    concrete value.
+    """
+    from repro.kernels.plan import DEFAULT_BLOCKS
+
+    block = tuple(
+        min(t, n) for t, n in zip(DEFAULT_BLOCKS[len(domain)], domain)
+    )
+    return Candidate(
+        block=block, vmem_bytes=0, halo_overhead=0.0, score=1.0,
+        fuse_steps=fuse_steps, stream=False, strategy="hwc",
+    )
+
+
+def enumerate_cross_strategy_nd(
+    domain: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int = 4,
+    *,
+    vmem_budget: int = VMEM_BUDGET,
+    fuse_steps_options: Sequence[int] = (1,),
+    stream_ok: bool = True,
+) -> list[Candidate]:
+    """The ``strategy="auto"`` candidate space: every ``swc`` and (rank
+    ≥ 2, ``stream_ok``) ``swc_stream`` configuration the joint
+    ``(block, fuse_steps, stream)`` enumeration admits, plus the ``hwc``
+    baseline as the modeled-traffic floor, ranked in ONE ordered list.
+
+    The hwc entry is always present, so the cross-strategy search can
+    never come back empty or VMEM-degenerate — a domain too small to
+    block or stream profitably resolves to the compiler-managed path
+    instead of a fallback record. Its depth is the smallest enumerated
+    depth (1 unless a per-step φ sequence pins the search deeper).
+    """
+    cands = enumerate_candidates_nd(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        fuse_steps_options=fuse_steps_options,
+        stream_options=(False, True) if stream_ok else (False,),
+    )
+    out = [hwc_candidate(domain, min(fuse_steps_options))] + cands
     out.sort(key=lambda c: (c.score, c.vmem_bytes))
     return out
 

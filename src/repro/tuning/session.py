@@ -22,14 +22,15 @@ from repro.tuning.cache import (
     TuningCache,
     TuningKey,
     TuningRecord,
+    candidate_label,
     current_backend,
-    format_block,
 )
 from repro.tuning.costmodel import (
     Candidate,
     VMEM_BUDGET,
     enumerate_candidates_1d,
     enumerate_candidates_nd,
+    enumerate_cross_strategy_nd,
     time_candidate,
 )
 
@@ -132,26 +133,40 @@ class TuningSession:
                 if best is None or t < best[0]:
                     best = (t, cand)
             if best is not None:
-                record = TuningRecord(
-                    block=best[1].block, timings_us=timings,
-                    source=self.record_source,
-                    fuse_steps=getattr(best[1], "fuse_steps", 1),
+                record = _candidate_record(
+                    best[1], timings, self.record_source
                 )
         if record is None:  # no measure fn, or every candidate discarded
-            record = TuningRecord(
-                block=candidates[0].block, timings_us={}, source="model",
-                fuse_steps=getattr(candidates[0], "fuse_steps", 1),
-            )
+            record = _candidate_record(candidates[0], {}, "model")
         self.cache.put(key, record)
         return record
 
 
+def _candidate_record(
+    cand: Any, timings: dict[str, float], source: str
+) -> TuningRecord:
+    """Record for a winning candidate — persisting the temporal depth,
+    the explicit-streaming flag, and (for cross-strategy searches) the
+    resolved strategy, so a warm cache hit reproduces the whole lowering
+    decision."""
+    return TuningRecord(
+        block=cand.block, timings_us=timings, source=source,
+        fuse_steps=getattr(cand, "fuse_steps", 1),
+        stream=getattr(cand, "stream", False),
+        strategy_resolved=getattr(cand, "strategy", ""),
+    )
+
+
 def _timing_label(cand: Any) -> str:
-    """Timing-table key for one candidate: the block, suffixed with the
-    temporal depth when a joint search mixes depths."""
-    label = format_block(cand.block)
-    fuse = getattr(cand, "fuse_steps", 1)
-    return label if fuse == 1 else f"{label}@f{fuse}"
+    """Timing-table key for one candidate — the shared
+    :func:`repro.tuning.cache.candidate_label` derivation, which
+    ``TuningRecord.winner_label`` mirrors for display code."""
+    return candidate_label(
+        cand.block,
+        getattr(cand, "fuse_steps", 1),
+        getattr(cand, "stream", False),
+        getattr(cand, "strategy", ""),
+    )
 
 
 # One process-wide session so all `block="auto"` call sites share a
@@ -395,8 +410,6 @@ def auto_fuse_nd(
     Depths that don't self-map (``n_out != n_f + n_aux``) can't fuse;
     only depth 1 is enumerated for them.
     """
-    import jax.numpy as jnp
-
     sess = session if session is not None else default_session()
     domain = tuple(f_interior.shape[1:])
     radii = ops.radius_per_axis()
@@ -432,17 +445,75 @@ def auto_fuse_nd(
 
     measure = None
     if _is_concrete(f_interior) and (aux is None or _is_concrete(aux)):
-        from repro.kernels import ops as kops
+        measure = _interior_measure_fn(
+            sess, f_interior, ops, phi, n_out, aux, radii,
+            default_strategy=strategy, interpret=interpret,
+        )
 
-        def measure(cand):
-            """Median PER-STEP seconds for one (block, depth) pair."""
-            depth = cand.fuse_steps
-            pad = [(0, 0)] + [(r * depth,) * 2 for r in radii]
-            fp = jnp.pad(f_interior, pad, mode="wrap")
-            aux_p = aux
-            if aux is not None and depth > 1:
-                apad = [(0, 0)] + [(r * (depth - 1),) * 2 for r in radii]
-                aux_p = jnp.pad(aux, apad, mode="wrap")
+    record = sess.tune(key, cands, measure)
+    return tuple(record.block), int(record.fuse_steps)
+
+
+def _interior_measure_fn(
+    sess: TuningSession,
+    f_interior,
+    ops,
+    phi,
+    n_out: int,
+    aux,
+    radii: tuple[int, ...],
+    *,
+    default_strategy: str = "swc",
+    interpret: bool | None = None,
+):
+    """Measurement closure shared by the joint-depth and cross-strategy
+    resolvers: median PER-STEP seconds for one candidate, on an UNPADDED
+    operand padded per candidate (``radius · depth`` ghost cells, so
+    each depth times the kernel it would actually run).
+
+    Candidates carrying a ``strategy`` attribute are dispatched per
+    strategy — ``hwc`` times the jitted XLA-managed reference (the
+    measured baseline of the cross-strategy search), everything else
+    the Pallas kernel at the candidate's block/depth/stream config.
+    """
+    import jax as _jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    def measure(cand):
+        """Median per-step seconds for one candidate configuration."""
+        depth = getattr(cand, "fuse_steps", 1)
+        strategy = getattr(cand, "strategy", default_strategy) or (
+            default_strategy
+        )
+        pad = [(0, 0)] + [(r * depth,) * 2 for r in radii]
+        fp = jnp.pad(f_interior, pad, mode="wrap")
+        aux_p = aux
+        if aux is not None and depth > 1:
+            apad = [(0, 0)] + [(r * (depth - 1),) * 2 for r in radii]
+            aux_p = jnp.pad(aux, apad, mode="wrap")
+
+        if strategy == "hwc":
+            # The XLA-managed path is always jitted when benchmarked —
+            # time what the compiler-managed regime actually runs.
+            if depth == 1:
+                hwc = _jax.jit(
+                    lambda f, a: kref.fused_stencil(f, ops, phi, aux=a)
+                )
+            else:
+                hwc = _jax.jit(
+                    lambda f, a: kref.fused_stencil_steps(
+                        f, ops, phi, depth, aux=a
+                    )
+                )
+
+            def fn():
+                """One timed XLA-managed (hwc) application."""
+                return hwc(fp, aux_p)
+
+        else:
 
             def fn():
                 """One timed depth-``depth`` launch at ``cand.block``."""
@@ -452,14 +523,110 @@ def auto_fuse_nd(
                     interpret=interpret,
                 )
 
-            # One launch advances ``depth`` steps — depths compete on
-            # per-step time, not per-launch time.
-            return time_candidate(
-                fn, warmup=sess.warmup, iters=sess.iters
-            ) / depth
+        # One launch advances ``depth`` steps — candidates compete on
+        # per-step time, not per-launch time.
+        return time_candidate(
+            fn, warmup=sess.warmup, iters=sess.iters
+        ) / depth
 
+    return measure
+
+
+def auto_strategy_nd(
+    f_interior,
+    ops,
+    phi,
+    n_out: int,
+    *,
+    aux=None,
+    fuse_steps: int | str = "auto",
+    interpret: bool | None = None,
+    session: TuningSession | None = None,
+    vmem_budget: int = VMEM_BUDGET,
+    depth_options: Sequence[int] = (1, 2, 3, 4),
+) -> tuple[str, tuple[int, ...], int]:
+    """Resolve ``strategy="auto"``: the CROSS-STRATEGY joint
+    ``(strategy, block, fuse_steps, stream)`` search over an UNPADDED
+    field stack (n_f, *spatial) — the paper's "no single caching regime
+    wins everywhere" finding closed into one tuning loop.
+
+    The candidate space is every ``swc`` and ``swc_stream``
+    configuration the joint enumeration admits plus the ``hwc``
+    baseline at the modeled-traffic floor
+    (:func:`repro.tuning.costmodel.enumerate_cross_strategy_nd`);
+    streaming candidates are enumerated only at rank ≥ 2 with no aux
+    operand (the streaming kernel rejects carries). Eager call sites
+    measure the top-k — the hwc candidate as the jitted XLA reference,
+    the Pallas candidates padded per depth — and persist the winner
+    under ONE ``auto:sauto`` key whose schema-v2 record carries the
+    resolved strategy, block, depth, and stream flag; traced call sites
+    take the cached or structural winner (no measurement). Returns
+    ``(strategy, block, fuse_steps)`` — the stream decision is implied
+    by the strategy (``swc_stream`` streams axis 0 by construction).
+
+    ``fuse_steps``: ``"auto"`` sweeps ``depth_options`` jointly (keyed
+    ``:fauto``); an int pins the search to that depth. A per-step φ
+    sequence pins it to ``len(phi)``; ops that don't self-map
+    (``n_out != n_f + n_aux``) only enumerate depth 1.
+    """
+    sess = session if session is not None else default_session()
+    domain = tuple(f_interior.shape[1:])
+    radii = ops.radius_per_axis()
+    n_f = f_interior.shape[0]
+    n_aux = aux.shape[0] if aux is not None else 0
+    itemsize = f_interior.dtype.itemsize
+    pinned = None  # explicitly requested depth (φ sequence or int)
+    if isinstance(phi, (tuple, list)):
+        pinned = len(phi)
+    elif fuse_steps != "auto":
+        pinned = int(fuse_steps)
+    if pinned is not None:
+        depth_options = (pinned,)
+    if n_out != n_f + n_aux:
+        if pinned is not None and pinned > 1:
+            # Mirror StencilPlan validation instead of silently
+            # clamping a depth the caller explicitly asked for.
+            raise ValueError(
+                "fuse_steps > 1 requires a self-map op with "
+                f"n_out == n_f + n_aux (got n_out={n_out}, n_f={n_f}, "
+                f"n_aux={n_aux}) — the cross-strategy search cannot "
+                f"honor the pinned depth {pinned}"
+            )
+        depth_options = (1,)
+    key = fused_nd_key(
+        domain, radii, n_f, n_out, str(f_interior.dtype), "auto",
+        fuse_steps=fuse_steps if fuse_steps == "auto" else depth_options[0],
+    )
+
+    cands = enumerate_cross_strategy_nd(
+        domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
+        fuse_steps_options=tuple(depth_options),
+        stream_ok=len(domain) >= 2 and n_aux == 0,
+    )
+    measure = None
+    if _is_concrete(f_interior) and (aux is None or _is_concrete(aux)):
+        measure = _interior_measure_fn(
+            sess, f_interior, ops, phi, n_out, aux, radii,
+            interpret=interpret,
+        )
+        # The hwc baseline must ALWAYS be measured, not just modeled:
+        # fused candidates model sub-compulsory traffic and can rank it
+        # out of the top-k window, but the whole point of the cross-
+        # strategy search is that the compiler-managed regime competes
+        # on real time. Pull it into the measured window (keeping the
+        # structural winner at index 0 — the traced/model fallback).
+        if sess.top_k > 1:
+            ih = next(
+                i for i, c in enumerate(cands) if c.strategy == "hwc"
+            )
+            if ih >= sess.top_k:
+                cands.insert(sess.top_k - 1, cands.pop(ih))
     record = sess.tune(key, cands, measure)
-    return tuple(record.block), int(record.fuse_steps)
+    return (
+        record.resolved_strategy,
+        tuple(record.block),
+        int(record.fuse_steps),
+    )
 
 
 def auto_block_3d(

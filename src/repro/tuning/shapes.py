@@ -64,6 +64,23 @@ def _warm_diffusion_stream(full: bool) -> None:
         p.step_op("swc_stream", block="auto", fuse_steps=2)(f0)
 
 
+def _warm_diffusion_auto(full: bool) -> None:
+    """Cross-strategy ``strategy="auto"`` records (one ``auto:sauto``
+    key per shape holding the resolved strategy/block/depth/stream), so
+    jitted ``"auto"`` call sites replay the measured cross-strategy
+    winner instead of the structural one."""
+    from repro.physics.diffusion import DiffusionProblem
+
+    shapes = [
+        ((2048, 2048) if full else (64, 128)),
+        ((128, 128, 128) if full else (16, 16, 64)),
+    ]
+    for shape in shapes:
+        p = DiffusionProblem(shape, accuracy=6)
+        f0 = p.init_field()
+        p.step_op("auto", fuse_steps="auto").resolved(f0)
+
+
 def _warm_mhd(full: bool) -> None:
     from repro.physics.mhd import MHDSolver
 
@@ -134,6 +151,7 @@ REGISTRY: tuple[WarmEntry, ...] = (
     WarmEntry("fig11/diffusion3d_swc", _warm_diffusion3d),
     WarmEntry("fig11/diffusion1d2d_swc", _warm_diffusion_lowdim),
     WarmEntry("fig11/diffusion_swc_stream", _warm_diffusion_stream),
+    WarmEntry("fig11/diffusion_auto", _warm_diffusion_auto),
     WarmEntry("fig13-14/mhd_swc", _warm_mhd),
     WarmEntry("fig13/mhd_swc_stream", _warm_mhd_stream),
     WarmEntry("fig07-09/xcorr1d", _warm_xcorr1d),

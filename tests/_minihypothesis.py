@@ -1,0 +1,76 @@
+"""Deterministic fallback for the tiny slice of the ``hypothesis`` API
+that ``tests/test_kernel_properties.py`` uses.
+
+``hypothesis`` belongs to the ``test``/``dev`` extras and is what CI
+installs — but on a bare interpreter the property tests used to be
+skipped wholesale (``pytest.importorskip``), which meant the stencil
+invariants (linearity, shift equivariance, fusion equivalence,
+causality) were silently unexercised exactly where people run
+``pytest`` casually. This shim keeps them RUNNING everywhere: seeded
+random sampling over the same strategies, no shrinking or
+coverage-guided search (install real hypothesis for that).
+
+Implemented subset: ``strategies.integers``, ``strategies.sampled_from``,
+``@given(**kwargs)``, ``@settings(max_examples=…, deadline=…)``. The
+draw sequence is seeded per test name, so failures reproduce.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    """A draw rule: ``draw(rng) -> value``."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (import as st)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: rng.choice(items))
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    """Record ``max_examples`` on the (already ``given``-wrapped)
+    test; ``deadline`` and anything else is accepted and ignored."""
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._mh_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test once per drawn example (seeded, deterministic)."""
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_mh_max_examples", 20)
+            seed = zlib.adler32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(**drawn)
+
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # introspect the original signature and demand the drawn
+        # parameters as fixtures. The wrapper is deliberately 0-ary.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

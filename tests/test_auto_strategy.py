@@ -1,0 +1,358 @@
+"""``strategy="auto"`` — the cross-strategy tuning loop.
+
+Covers the PR acceptance criteria: resolution parity against each
+concrete strategy (rank × dtype), the schema-v2 record round-trip
+(cold-measure → cache-write → warm-hit reproducing the identical
+(strategy, block, depth, stream) tuple with zero re-measurement, in
+this process and a fresh one), the jit-traced structural path, the
+cost-model unit behavior (a cache-heavy shape picks ``swc_stream``, a
+tiny shape falls back to ``hwc``), and the warm-cache regression for
+the previously-dropped ``stream`` flag.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.fusion import FusedStencilOp, integrate  # noqa: E402
+from repro.core.stencil import derivative_operator_set  # noqa: E402
+from repro.kernels.plan import plan_from_record  # noqa: E402
+from repro.physics.diffusion import DiffusionProblem  # noqa: E402
+from repro.tuning import (  # noqa: E402
+    SCHEMA_VERSION,
+    TuningCache,
+    TuningRecord,
+    enumerate_cross_strategy_nd,
+    fused_nd_key,
+    lookup_fused_nd,
+)
+from repro.tuning import session as sess_mod  # noqa: E402
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SHAPES = {1: (1 << 10,), 2: (32, 64), 3: (16, 12, 16)}
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    return tmp_path
+
+
+# --- resolution parity (rank × dtype) ------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_auto_resolves_concrete_and_matches_reference(
+    cache_dir, ndim, dtype
+):
+    """``strategy="auto"`` resolves to one of the concrete regimes and
+    its output matches the sequential hwc reference at the chosen
+    depth, at every rank and dtype."""
+    p = DiffusionProblem(SHAPES[ndim], accuracy=6)
+    f0 = jnp.asarray(p.init_field(seed=1), dtype)
+    op = p.step_op("auto", fuse_steps="auto")
+    assert op.block == "auto"  # coerced from None: auto owns the block
+    rop = op.resolved(f0)
+    assert rop.strategy in ("hwc", "swc", "swc_stream")
+    assert isinstance(rop.block, tuple) and len(rop.block) == ndim
+    assert rop.fuse_steps >= 1
+    if ndim == 1:
+        assert rop.strategy != "swc_stream"  # no cross-stream axis
+    out = op(f0)  # __call__ resolves then applies
+    expect = integrate(p.step_op("hwc"), f0, rop.fuse_steps)
+    tol = 2e-5 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=tol, atol=tol
+    )
+
+
+def test_auto_parity_vs_each_concrete_strategy(cache_dir):
+    """Whatever regime auto picks, forcing each concrete strategy at
+    the resolved (block, depth) produces the same numerics — the
+    resolved op is an ordinary member of the concrete family."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = p.init_field(seed=2)
+    rop = p.step_op("auto", fuse_steps="auto").resolved(f0)
+    auto_out = np.asarray(rop(f0))
+    concrete = FusedStencilOp(
+        rop.ops, rop.phi, 1, strategy=rop.strategy, block=rop.block,
+        fuse_steps=rop.fuse_steps,
+    )
+    np.testing.assert_array_equal(auto_out, np.asarray(concrete(f0)))
+
+
+# --- record round-trip (acceptance criterion) ----------------------------------
+
+
+def test_auto_round_trips_bit_identically_through_cache(cache_dir):
+    """Cold measure → cache write → warm hit: the warm resolution is
+    the identical (strategy, block, depth) tuple, takes zero new
+    measurements, and reproduces the output bit-for-bit. A second
+    process replays the same record from disk."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = p.init_field(seed=3)
+    op = p.step_op("auto", fuse_steps="auto")
+    r1 = op.resolved(f0)  # cold: measures and persists
+    out1 = np.asarray(r1(f0))
+    rec = lookup_fused_nd(f0, op.ops, 1, "auto", fuse_steps="auto")
+    assert rec is not None and rec.source == "measured"
+    assert rec.schema == SCHEMA_VERSION
+    assert rec.strategy_resolved == r1.strategy
+    assert rec.stream == (r1.strategy == "swc_stream")
+
+    before = sess_mod.MEASURE_COUNT
+    r2 = p.step_op("auto", fuse_steps="auto").resolved(f0)
+    assert sess_mod.MEASURE_COUNT == before  # warm hit: no re-measure
+    assert (r2.strategy, r2.block, r2.fuse_steps) == (
+        r1.strategy, r1.block, r1.fuse_steps,
+    )
+    np.testing.assert_array_equal(out1, np.asarray(r2(f0)))
+
+    # The plan the record reconstructs is the plan the kernel runs.
+    plan = plan_from_record(op.ops, f0.shape, 1, rec, dtype="float32")
+    if r1.strategy == "hwc":
+        assert plan is None
+    else:
+        assert plan.strategy == r1.strategy
+        assert plan.fuse_steps == r1.fuse_steps
+
+    # Fresh process: replay from disk with ZERO measurements.
+    code = """
+import numpy as np
+import jax.numpy as jnp
+from repro.physics.diffusion import DiffusionProblem
+from repro.tuning import session as sess_mod
+
+p = DiffusionProblem((32, 64), accuracy=6)
+f0 = p.init_field(seed=3)
+rop = p.step_op("auto", fuse_steps="auto").resolved(f0)
+assert sess_mod.MEASURE_COUNT == 0, sess_mod.MEASURE_COUNT
+print(f"REPLAYED {rop.strategy} {rop.block} {rop.fuse_steps}")
+"""
+    env = dict(os.environ)
+    env["REPRO_TUNE_CACHE"] = str(cache_dir)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env,
+    )
+    assert res.returncode == 0, res.stderr
+    assert (
+        f"REPLAYED {r1.strategy} {r1.block} {r1.fuse_steps}"
+        in res.stdout
+    )
+
+
+def test_warm_hit_reproduces_stream_winner_without_remeasure(cache_dir):
+    """THE regression this PR fixes: a persisted ``stream=True`` winner
+    survives the cache round trip — the warm hit resolves back to
+    ``swc_stream`` at the recorded block/depth without re-measuring
+    (pre-v2 records had no ``stream``/``strategy_resolved`` fields, so
+    the streaming decision was silently dropped)."""
+    p = DiffusionProblem((64, 128), accuracy=6)
+    f0 = p.init_field(seed=4)
+    key = fused_nd_key(
+        (64, 128), (3, 3), 1, 1, "float32", "auto", fuse_steps="auto"
+    )
+    assert ":sauto" in key.strategy and ":fauto" in key.strategy
+    TuningCache().put(
+        key,
+        TuningRecord(
+            block=(4, 128), timings_us={"4x128@f2:s": 5.0},
+            source="measured", fuse_steps=2, stream=True,
+            strategy_resolved="swc_stream",
+        ),
+    )
+    before = sess_mod.MEASURE_COUNT
+    rop = p.step_op("auto", fuse_steps="auto").resolved(f0)
+    assert sess_mod.MEASURE_COUNT == before  # warm hit, no re-measure
+    assert rop.strategy == "swc_stream"
+    assert rop.block == (4, 128) and rop.fuse_steps == 2
+    # ...and the reproduced op actually runs as a fused stream.
+    base = integrate(p.step_op("hwc"), f0, 2)
+    np.testing.assert_allclose(
+        np.asarray(rop(f0)), np.asarray(base), rtol=2e-5, atol=1e-7
+    )
+
+
+def test_stream_flag_persisted_on_fauto_records(cache_dir):
+    """The per-strategy ``swc_stream:…:fauto`` joint search also writes
+    the stream flag through to disk (the raw JSON), so schema-v2
+    records are self-describing about the regime they encode."""
+    import json
+
+    p = DiffusionProblem((64, 128), accuracy=6)
+    f0 = p.init_field(seed=5)
+    jax.jit(p.step_op("swc_stream", block="auto", fuse_steps="auto"))(f0)
+    raw = json.loads((cache_dir / "cache.json").read_text())
+    stream_recs = [
+        r for k, r in raw["records"].items()
+        if "swc_stream:sy:fauto" in k
+    ]
+    assert stream_recs, list(raw["records"])
+    assert all(r["stream"] is True for r in stream_recs)
+    assert all(
+        r["strategy_resolved"] == "swc_stream" for r in stream_recs
+    )
+
+
+# --- jit-traced structural path ------------------------------------------------
+
+
+def test_auto_under_jit_uses_structural_winner(cache_dir):
+    """Under tracing nothing can be measured: the cross-strategy search
+    records the cost-model winner (``source="model"``) and the traced
+    computation still matches the reference at the chosen depth."""
+    p = DiffusionProblem((64, 128), accuracy=6)
+    f0 = p.init_field(seed=6)
+    op = p.step_op("auto", fuse_steps="auto")
+    out = jax.jit(op)(f0)
+    rec = lookup_fused_nd(f0, op.ops, 1, "auto", fuse_steps="auto")
+    assert rec is not None and rec.source == "model"
+    assert rec.strategy_resolved in ("hwc", "swc", "swc_stream")
+    expect = integrate(p.step_op("hwc"), f0, int(rec.fuse_steps))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=2e-5, atol=1e-7
+    )
+
+
+# --- cost model ----------------------------------------------------------------
+
+
+def test_cross_strategy_costmodel_shape_dependence():
+    """The paper's Fig. 5 finding as a unit test: a cache-heavy 3-D
+    shape (large domain, wide halo) structurally prefers fused explicit
+    streaming, while a tiny depth-1 shape falls back to the hwc
+    baseline (no Pallas config models below the compulsory-traffic
+    floor)."""
+    heavy = enumerate_cross_strategy_nd(
+        (256, 256, 256), (3, 3, 3), 1, 1, 4,
+        fuse_steps_options=(1, 2, 3, 4),
+    )
+    assert heavy[0].strategy == "swc_stream"
+    assert heavy[0].fuse_steps > 1
+    tiny = enumerate_cross_strategy_nd(
+        (8, 16), (1, 1), 2, 1, 4, fuse_steps_options=(1,)
+    )
+    assert tiny[0].strategy == "hwc"
+    assert tiny[0].score == 1.0  # the modeled-traffic floor
+    # the hwc floor is always present, so the space is never empty
+    assert any(c.strategy == "hwc" for c in heavy)
+
+
+def test_hwc_floor_only_beaten_by_sub_compulsory_traffic():
+    """At depth 1 every blocked candidate re-fetches halo (> floor), so
+    hwc ranks first; opening the depth axis lets fused candidates model
+    sub-compulsory per-step traffic and overtake it."""
+    d1 = enumerate_cross_strategy_nd(
+        (64, 128), (3, 3), 1, 1, 4, fuse_steps_options=(1,)
+    )
+    assert d1[0].strategy == "hwc"
+    joint = enumerate_cross_strategy_nd(
+        (64, 128), (3, 3), 1, 1, 4, fuse_steps_options=(1, 2, 3, 4)
+    )
+    assert joint[0].strategy != "hwc"
+    assert joint[0].score < 1.0
+
+
+# --- validation ----------------------------------------------------------------
+
+
+def test_auto_validation_surface():
+    """strategy='auto' owns the block: None is coerced, an explicit
+    tile rejected; apply_padded demands a resolved op."""
+    opset = derivative_operator_set(2, 4, spacing=0.5)
+
+    def phi(d):
+        return d["val"]
+
+    op = FusedStencilOp(opset, phi, 1, strategy="auto")
+    assert op.block == "auto"
+    with pytest.raises(ValueError, match="block='auto'"):
+        FusedStencilOp(
+            opset, phi, 1, strategy="auto", block=(8, 16)
+        )
+    with pytest.raises(ValueError, match="resolve"):
+        op.apply_padded(jnp.zeros((1, 20, 20)))
+    # fuse_steps='auto' composes with strategy='auto'
+    op2 = FusedStencilOp(
+        opset, phi, 1, strategy="auto", fuse_steps="auto"
+    )
+    assert op2.needs_resolution
+
+
+def test_hwc_baseline_always_measured_on_eager_resolution(cache_dir):
+    """Even when fused candidates structurally out-rank hwc out of the
+    top-k window, the eager cross-strategy search still TIMES the XLA
+    baseline — the record's timing table must contain the ``hwc`` row
+    (the contract: hwc is the measured baseline, not just a modeled
+    floor)."""
+    p = DiffusionProblem((64, 64), accuracy=6)
+    f0 = p.init_field(seed=10)
+    heavy = enumerate_cross_strategy_nd(
+        (64, 64), (3, 3), 1, 1, 4, fuse_steps_options=(1, 2, 3, 4)
+    )
+    hwc_rank = next(
+        i for i, c in enumerate(heavy) if c.strategy == "hwc"
+    )
+    assert hwc_rank >= 4  # structurally outside the default top-k
+    p.step_op("auto", fuse_steps="auto").resolved(f0)
+    rec = lookup_fused_nd(
+        f0, p.step_op("hwc").ops, 1, "auto", fuse_steps="auto"
+    )
+    assert rec.source == "measured"
+    assert "hwc" in rec.timings_us, rec.timings_us
+
+
+def test_auto_pinned_depth_on_non_selfmap_raises(cache_dir):
+    """An explicitly requested fuse_steps > 1 on a non-self-map op
+    raises under strategy='auto' too (mirroring plan validation)
+    instead of silently advancing fewer steps than asked."""
+    opset = derivative_operator_set(2, 4, spacing=0.5)
+
+    def phi(d):
+        return d["val"][:1]  # n_out=1 != n_f=2: not a self-map
+
+    f = jnp.zeros((2, 16, 32), jnp.float32)
+    op = FusedStencilOp(opset, phi, 1, strategy="auto", fuse_steps=3)
+    with pytest.raises(ValueError, match="self-map"):
+        op.resolved(f)
+
+
+def test_auto_with_fixed_depth_pins_search(cache_dir):
+    """An int fuse_steps under strategy='auto' searches strategies at
+    exactly that depth and keys without the ``:fauto`` suffix."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = p.init_field(seed=8)
+    rop = p.step_op("auto", fuse_steps=2).resolved(f0)
+    assert rop.fuse_steps == 2
+    keys = list(TuningCache().items())
+    assert any("auto:sauto:f2|" in k for k in keys), keys
+
+
+def test_auto_mhd_rhs_depth_stays_one(cache_dir):
+    """MHDSolver(strategy='auto'): the RHS op searches strategy/block
+    but keeps depth 1 (the RHS is not a time step), and matches hwc."""
+    from repro.physics.mhd import MHDSolver
+
+    n = 8
+    base = MHDSolver((n, n, n), strategy="hwc", accuracy=2)
+    auto = MHDSolver((n, n, n), strategy="auto", accuracy=2)
+    assert auto.op_block == "auto"
+    f = base.init_smooth(seed=0, amplitude=1e-3, dtype=jnp.float64)
+    rop = auto.rhs_op().resolved(f)
+    assert rop.fuse_steps == 1
+    r0 = base.rhs(f)
+    r1 = auto.rhs(f)
+    rel = float(jnp.abs(r1 - r0).max() / jnp.abs(r0).max())
+    assert rel < 1e-10

@@ -31,8 +31,10 @@ from repro.tuning.costmodel import enumerate_candidates_nd  # noqa: E402
 
 RNG = np.random.default_rng(31)
 
-# Multi-chunk stream extents, deliberately not tile-aligned on x.
-SHAPES = {2: (12, 24), 3: (6, 10, 24)}
+# Multi-chunk stream extents, deliberately not tile-aligned on x. The
+# stream axis is sized to hold the deepest carried halo tested plus one
+# chunk (2·r·S + τ₀ with r = 2, S ≤ 3 — the plan-validation bound).
+SHAPES = {2: (20, 24), 3: (15, 10, 24)}
 BLOCKS = {2: (4, 12), 3: (3, 5, 12)}
 
 
@@ -127,7 +129,7 @@ def test_fused_stream_per_step_phis():
 def test_diffusion_simulate_stream_parity():
     """Fused streaming diffusion (the acceptance workload) matches the
     strategy-agnostic sequential run at ranks 2 and 3."""
-    for shape in ((16, 32), (8, 12, 16)):
+    for shape in ((32, 32), (16, 12, 16)):
         p = DiffusionProblem(shape, accuracy=6)
         f0 = p.init_field(seed=3)
         base = simulate(p, f0, 4, strategy="hwc")
@@ -137,12 +139,86 @@ def test_diffusion_simulate_stream_parity():
         )
 
 
+def test_integrate_stream_remainder_resolves_own_key(
+    tmp_path, monkeypatch
+):
+    """``n_steps % fuse_steps != 0`` under ``swc_stream``: the
+    remainder launch matches the sequential run bit-for-bit in step
+    count, and — with ``block="auto"`` — resolves through its OWN
+    depth-``rem`` tuning key instead of inheriting the block tuned for
+    the full depth (whose halo/VMEM geometry is different)."""
+    from repro.tuning import TuningCache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    p = DiffusionProblem((32, 32), accuracy=6)
+    f0 = p.init_field(seed=7)
+    base = simulate(p, f0, 5, strategy="hwc")  # 5 = 2·2 + 1
+    op = p.step_op("swc_stream", block="auto", fuse_steps=2)
+    fused = integrate(op, f0, 5)
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(base), rtol=1e-5, atol=1e-7
+    )
+    keys = list(TuningCache().items())
+    assert any("swc_stream:sy:f2|" in k for k in keys), keys
+    assert any(
+        "swc_stream:sy|" in k for k in keys
+    ), keys  # the depth-1 remainder tuned its own record
+
+
+def test_integrate_auto_depth_remainder_reresolves(tmp_path, monkeypatch):
+    """``fuse_steps="auto"`` + a remainder: the shallower launch goes
+    back through ``block="auto"`` (its own key) rather than reusing the
+    deep-depth winner's block, and the step count stays exact."""
+    from repro.tuning import TuningCache
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = p.init_field(seed=9)
+    op = p.step_op("swc", block="auto", fuse_steps="auto")
+    depth = op.resolved(f0).fuse_steps  # cache-warming probe
+    assert depth > 1  # the traffic model picks a fused depth
+    n_steps = depth + 1  # guarantees a depth-1 remainder
+    out = integrate(op, f0, n_steps)
+    base = simulate(p, f0, n_steps, strategy="hwc")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(base), rtol=1e-5, atol=1e-7
+    )
+    keys = list(TuningCache().items())
+    # joint-search record plus the remainder's own depth-1 record
+    assert any("|swc:fauto|" in k for k in keys), keys
+    assert any("|swc|" in k for k in keys), keys
+
+
 def test_stream_rejects_unroll_and_aux():
     opset, phi, f = _problem(2, jnp.float32, 1)
     with pytest.raises(ValueError, match="unroll"):
         plan_stencil(opset, f.shape, 2, strategy="swc_stream", unroll=2)
     with pytest.raises(ValueError, match="aux"):
         plan_stencil(opset, f.shape, 2, strategy="swc_stream", n_aux=1)
+
+
+def test_fused_stream_too_small_stream_axis_raises():
+    """The fused stream walk needs the stream axis to hold the carried
+    halo (2·r·S planes) plus one chunk: a domain below that bound is
+    rejected at plan validation with a clear error instead of failing
+    deep in the emitter, and the planner first tries to shrink the
+    chunk (the self-healing path for default/auto blocks)."""
+    opset = derivative_operator_set(2, 6, spacing=0.3)  # r = 3
+    # y interior 8 < 2·3·2 + 1: no chunk size can satisfy the bound.
+    padded = (1, 8 + 12, 64 + 12)
+    with pytest.raises(ValueError, match="carried halo plus one chunk"):
+        plan_stencil(
+            opset, padded, 1, strategy="swc_stream", fuse_steps=2
+        )
+    # y interior 16: cap = 16 - 12 = 4 — the default (16, 128) block's
+    # stream chunk self-heals to 4 instead of raising.
+    plan = plan_stencil(
+        opset, (1, 16 + 12, 64 + 12), 1, strategy="swc_stream",
+        fuse_steps=2,
+    )
+    assert plan.block[0] == 4
+    # depth 1 carries no fused halo: the bound does not apply.
+    plan_stencil(opset, (1, 8 + 6, 64 + 6), 1, strategy="swc_stream")
 
 
 # --- tuning keys: stream axis × depth ------------------------------------------
