@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.util import emit, time_fn
 from repro.core.rooflinelib import TPU_V5E, stencil_ideal_bytes
 from repro.physics.mhd import MHDSolver, N_FIELDS
-from repro.tuning import format_block, lookup_fused3d
+from repro.tuning import format_block, lookup_fused_nd
 
 
 def run(full: bool = False) -> None:
@@ -37,7 +37,7 @@ def run(full: bool = False) -> None:
         tuned = ""
         if kw.get("block") == "auto":
             solver.rhs(f0)  # eager: tune-and-persist on a cache miss
-            rec = lookup_fused3d(
+            rec = lookup_fused_nd(
                 f0, solver.operator_set, N_FIELDS, kw["strategy"]
             )
             if rec is not None:

@@ -14,8 +14,8 @@ from repro.tuning import (
     TuningSession,
     default_session,
     format_block,
-    fused3d_candidates,
-    fused3d_key,
+    fused_nd_candidates,
+    fused_nd_key,
     time_candidate,
 )
 
@@ -26,10 +26,10 @@ def run(full: bool = False) -> None:
     solver0 = MHDSolver(shape, strategy="swc")
     f0 = solver0.init_fields()
     radii = solver0.rhs_op().radius_per_axis
-    key = fused3d_key(
+    key = fused_nd_key(
         shape, radii, N_FIELDS, N_FIELDS, str(f0.dtype), "swc"
     )
-    cands = fused3d_candidates(
+    cands = fused_nd_candidates(
         shape, radii, N_FIELDS, N_FIELDS, f0.dtype.itemsize
     )
     by_block = {c.block: c for c in cands}

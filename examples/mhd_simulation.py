@@ -75,13 +75,13 @@ def main() -> None:
     # with the SWC block resolved by the persistent autotuner: a cache
     # hit replays the recorded winner, a miss runs the paper's
     # rank-then-measure search once and persists it.
-    from repro.tuning import format_block, lookup_fused3d
+    from repro.tuning import format_block, lookup_fused_nd
 
     swc = MHDSolver((args.n,) * 3, params=solver.params, strategy="swc",
                     block="auto")
     err = float(jnp.abs(solver.rhs(f) - swc.rhs(f)).max())
     scale = float(jnp.abs(solver.rhs(f)).max())
-    rec = lookup_fused3d(f, swc.operator_set, f.shape[0], "swc")
+    rec = lookup_fused_nd(f, swc.operator_set, f.shape[0], "swc")
     if rec is not None:
         print(f"auto-tuned SWC block: {format_block(rec.block)} "
               f"[{rec.source}]")

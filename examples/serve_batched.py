@@ -7,18 +7,16 @@ behind production LLM serving, on a reduced model on CPU.
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.configs.registry import get_config, get_model, reduced_config  # noqa: E402
-from repro.distrib import sharding as shlib  # noqa: E402
-from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.configs.registry import get_config, get_model, reduced_config
+from repro.distrib import sharding as shlib
+from repro.launch.mesh import make_mesh
+from repro.launch.serve_sim import RequestQueue
 
 
 def main() -> None:
@@ -37,13 +35,14 @@ def main() -> None:
     params = api.init_params(cfg, key)
 
     rng = np.random.default_rng(0)
-    # Request queue: (id, prompt token, target length) — lengths differ so
-    # slots free at different times.
-    queue = [
+    # Request queue (shared scaffolding with the ensemble serving loop):
+    # (id, prompt token, target length) — lengths differ so slots free
+    # at different times.
+    queue = RequestQueue(
         (i, int(rng.integers(0, cfg.vocab)),
          int(rng.integers(args.max_new // 3, args.max_new)))
         for i in range(args.requests)
-    ]
+    )
     cache = api.init_decode_cache(cfg, args.slots, 64)
 
     @jax.jit
@@ -64,7 +63,7 @@ def main() -> None:
         tok_host = np.array(tokens)  # writable host copy
         for s in range(args.slots):
             if slot_left[s] == 0 and queue:
-                rid, prompt, length = queue.pop(0)
+                rid, prompt, length = queue.pop()
                 slot_req[s], slot_left[s] = rid, length
                 outputs[rid] = []
                 tok_host[s, 0] = prompt

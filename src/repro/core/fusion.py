@@ -271,7 +271,12 @@ class FusedStencilOp:
         ``aux``: extra point-wise inputs forwarded to φ (fused axpy /
         RK carries — beyond-paper extension); (n_aux, *interior) at
         depth 1, padded by ``radius * (fuse_steps - 1)`` at depth > 1 so
-        intermediate sweeps see an aligned carry."""
+        intermediate sweeps see an aligned carry.
+
+        A batched (batch, n_f, *padded) ensemble stack is accepted
+        wherever an (n_f, *padded) stack is — detected by rank and
+        lowered through the member-major batched kernel (hwc uses the
+        ``vmap`` oracles)."""
         depth = self._depth_or_none()
         if depth is None or self.strategy == "auto":
             raise ValueError(
@@ -286,7 +291,16 @@ class FusedStencilOp:
                 fuse_steps=depth,
             )
         # hwc — XLA owns on-chip residency (the paper's compiler-managed
-        # caching regime).
+        # caching regime). A (batch, n_f, *spatial) ensemble stack
+        # dispatches to the vmap'd oracles.
+        if f_padded.ndim == self.ops.ndim + 2:
+            if depth == 1:
+                return kref.fused_stencil_batched(
+                    f_padded, self.ops, self.phi, aux=aux
+                )
+            return kref.fused_stencil_steps_batched(
+                f_padded, self.ops, self.phi, depth, aux=aux
+            )
         if depth == 1:
             return kref.fused_stencil(
                 f_padded, self.ops, self.phi, aux=aux
@@ -299,19 +313,25 @@ class FusedStencilOp:
         self, f: jnp.ndarray, aux: jnp.ndarray | None = None
     ) -> jnp.ndarray:
         """ψ then φ(A·B): pad with the boundary function and apply —
-        advancing ``fuse_steps`` time steps per call."""
+        advancing ``fuse_steps`` time steps per call.
+
+        ``f`` is (n_f, *spatial), or (batch, n_f, *spatial) for an
+        ensemble stack — the extra leading axis is detected by rank and
+        threaded through padding and the batched kernel lowering
+        (``aux`` then carries the same leading axis)."""
         if self.needs_resolution:
             return self.resolved(f, aux)(f, aux)
         depth = int(self.fuse_steps)
         rads = self.radius_per_axis
+        lead = 2 if f.ndim == self.ops.ndim + 2 else 1
         fp = boundary.pad(
             f, [r * depth for r in rads], self.boundary_mode,
-            spatial_axes=range(1, f.ndim),
+            spatial_axes=range(lead, f.ndim),
         )
         if aux is not None and depth > 1:
             aux = boundary.pad(
                 aux, [r * (depth - 1) for r in rads], self.boundary_mode,
-                spatial_axes=range(1, aux.ndim),
+                spatial_axes=range(lead, aux.ndim),
             )
         return self.apply_padded(fp, aux=aux)
 

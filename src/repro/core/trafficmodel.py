@@ -224,6 +224,53 @@ def stencil_stream_hbm_bytes_per_step(
     return (read + write) * itemsize / fuse_steps
 
 
+# Fixed per-launch overhead charged by the batched per-member model:
+# grid bookkeeping, kernel argument marshalling, and the pipeline's
+# prologue/epilogue DMA ramp, expressed as equivalent HBM bytes. One
+# batched launch walking B members amortizes this over the whole
+# ensemble (and over the fuse depth), which is exactly the lever the
+# batch axis pulls — B vmap'd launches would each pay it in full.
+STENCIL_LAUNCH_OVERHEAD_BYTES = 64 * 1024
+
+
+def stencil_batched_hbm_bytes_per_member_step(
+    domain: Sequence[int],
+    block: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    *,
+    batch: int = 1,
+    fuse_steps: int = 1,
+    stream: bool = False,
+    launch_overhead_bytes: float = STENCIL_LAUNCH_OVERHEAD_BYTES,
+) -> float:
+    """Modeled HBM bytes per ENSEMBLE MEMBER per simulated time step
+    for a batched launch walking ``batch`` members per block.
+
+    The field/halo traffic itself is per-member (every member's tile
+    and halo must move regardless of batching — the per-member byte
+    functions above already describe it), but the fixed per-launch
+    overhead (:data:`STENCIL_LAUNCH_OVERHEAD_BYTES`) is paid once per
+    launch and divides across all ``batch`` members and ``fuse_steps``
+    in-kernel sweeps. Per-member bytes therefore strictly decrease in
+    ``batch`` (for any positive overhead), which is the quantity the
+    batched candidate enumeration ranks.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    bytes_fn = (
+        stencil_stream_hbm_bytes_per_step
+        if stream
+        else stencil_hbm_bytes_per_step
+    )
+    member = bytes_fn(
+        domain, block, radii, n_f, n_out, itemsize, fuse_steps
+    )
+    return member + launch_overhead_bytes / (batch * fuse_steps)
+
+
 def stencil_redundant_compute_fraction(
     block: Sequence[int],
     radii: Sequence[int],

@@ -37,6 +37,7 @@ The HWC ("let the compiler manage residency") strategy lives in
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable
 
@@ -171,6 +172,79 @@ def _kernel_temporal(
             ]
 
 
+def _member_phi(phi, batch: int, n_f: int, n_aux: int):
+    """Wrap a single-member φ for a member-major flattened ensemble.
+
+    The batched lowering stacks B members along the leading field axis
+    (rows ``m·n_f .. (m+1)·n_f`` belong to member ``m``), so every
+    kernel body stays batch-oblivious: taps vectorize over the B·n_f
+    rows, and only the point-wise φ needs to know member boundaries.
+    The wrapper slices each member's derivative rows (and aux rows, if
+    any), applies φ per member in a static Python loop (unrolled at
+    trace time), and re-concatenates outputs member-major.
+    """
+
+    def wrapped(derivs, aux=None):
+        outs = []
+        for m in range(batch):  # static: unrolled at trace time
+            d_m = {
+                k: v[m * n_f : (m + 1) * n_f] for k, v in derivs.items()
+            }
+            if aux is None:
+                outs.append(phi(d_m))
+            else:
+                outs.append(phi(d_m, aux[m * n_aux : (m + 1) * n_aux]))
+        return jnp.concatenate(outs, axis=0)
+
+    return wrapped
+
+
+def _fused_batched(
+    f_padded, ops, phis, plan: StencilPlan, *, aux, interpret
+):
+    """Lower a batched (ensemble) plan: one kernel walks all B members
+    per block instead of B independent launches.
+
+    Members are flattened member-major onto the field axis —
+    (B, n_f, *sp) → (B·n_f, *sp) — so the staged input window (and its
+    halo fetch) is shared by the whole ensemble: the per-launch-step
+    pipeline/prologue cost is paid once per block, not once per member.
+    Each φ is wrapped by :func:`_member_phi` and the plan is re-derived
+    with ``batch=1`` and B-scaled field counts, so the pipelined,
+    temporal and streaming kernel bodies all serve ensembles unchanged.
+    Member-major rows stay aligned across temporal sweeps because
+    depth > 1 requires per-member ``n_out == n_f`` (aux carries with
+    batching are rejected at plan level). Returns
+    (batch, n_out, *interior).
+    """
+    b = plan.batch
+    if f_padded.shape[:2] != (b, plan.n_f):
+        raise ValueError(
+            f"batched operand must be (batch, n_f, *spatial) = "
+            f"({b}, {plan.n_f}, ...), got shape {f_padded.shape}"
+        )
+    flat = f_padded.reshape((b * plan.n_f,) + f_padded.shape[2:])
+    aux_flat = None
+    if aux is not None:
+        if aux.shape[:2] != (b, plan.n_aux):
+            raise ValueError(
+                f"batched aux must be (batch, n_aux, *spatial) = "
+                f"({b}, {plan.n_aux}, ...), got shape {aux.shape}"
+            )
+        aux_flat = aux.reshape((b * plan.n_aux,) + aux.shape[2:])
+    wrapped = tuple(
+        _member_phi(p, b, plan.n_f, plan.n_aux) for p in phis
+    )
+    derived = dataclasses.replace(
+        plan, batch=1, n_f=b * plan.n_f, n_out=b * plan.n_out,
+        n_aux=b * plan.n_aux,
+    )
+    out = fused_stencil_pallas(
+        flat, ops, wrapped, derived, aux=aux_flat, interpret=interpret
+    )
+    return out.reshape((b, plan.n_out) + plan.interior)
+
+
 def _grid_and_maps(plan: StencilPlan):
     """Grid extents and (input, tile-indexed) index maps per rank.
 
@@ -222,6 +296,12 @@ def fused_stencil_pallas(
     depth S > 1 (staged as overlapping windows so intermediate sweeps
     see an aligned carry). ``phi`` may be a sequence of ``fuse_steps``
     callables (one per fused sweep). Returns (n_out, *interior).
+
+    When ``plan.batch > 1`` the operands grow a leading ensemble axis —
+    ``f_padded`` (batch, n_f, *padded), ``aux`` (batch, n_aux, ...) —
+    and one kernel walks all members per block (member-major field
+    rows, shared halo window; see :func:`_fused_batched`). Returns
+    (batch, n_out, *interior).
     """
     if (aux is not None) != bool(plan.n_aux):
         raise ValueError("aux operand does not match plan.n_aux")
@@ -234,6 +314,10 @@ def fused_stencil_pallas(
         raise ValueError(
             f"got {len(phis)} phi callables for plan with "
             f"fuse_steps={plan.fuse_steps}"
+        )
+    if plan.batch > 1 or f_padded.ndim == plan.rank + 2:
+        return _fused_batched(
+            f_padded, ops, phis, plan, aux=aux, interpret=interpret
         )
     if plan.strategy == "swc_stream":
         return _fused_stream(

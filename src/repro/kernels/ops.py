@@ -135,10 +135,26 @@ def fused_stencil_nd(
     callables. One call advances ``fuse_steps`` time steps. Depth > 1
     composes with both 'swc' (halo-widened pipelined blocks) and
     'swc_stream' (the carried halo widens to ``2·r·fuse_steps`` planes).
+
+    A batched (ensemble) operand is detected by rank: ``f_padded`` of
+    shape (batch, n_f, *spatial_padded) — i.e. ``ops.ndim + 2`` axes —
+    lowers every strategy through one kernel that walks all members per
+    block (member-major, shared halo window; 'hwc' uses the ``vmap``
+    reference). ``aux`` then carries the same leading axis. Returns
+    (batch, n_out, *interior).
     """
     if interpret is None:
         interpret = _default_interpret()
+    batched = f_padded.ndim == ops.ndim + 2
     if strategy == "hwc":
+        if batched:
+            if fuse_steps == 1:
+                return _ref.fused_stencil_batched(
+                    f_padded, ops, phi, aux=aux
+                )
+            return _ref.fused_stencil_steps_batched(
+                f_padded, ops, phi, fuse_steps, aux=aux
+            )
         if fuse_steps == 1:
             return _ref.fused_stencil(f_padded, ops, phi, aux=aux)
         return _ref.fused_stencil_steps(
@@ -151,10 +167,12 @@ def fused_stencil_nd(
             f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
             unroll=unroll, fuse_steps=fuse_steps, interpret=interpret,
         )
+    n_aux = 0
+    if aux is not None:
+        n_aux = aux.shape[1] if batched else aux.shape[0]
     plan = plan_stencil(
         ops, f_padded.shape, n_out, strategy=strategy, block=block,
-        dtype=str(f_padded.dtype),
-        n_aux=aux.shape[0] if aux is not None else 0,
+        dtype=str(f_padded.dtype), n_aux=n_aux,
         unroll=unroll, fuse_steps=fuse_steps,
     )
     return fused_stencil_pallas(
@@ -173,7 +191,20 @@ def fused_stencil3d(
     block: tuple[int, int, int] | str = (8, 8, 128),
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Historical rank-3 entry point — alias of :func:`fused_stencil_nd`."""
+    """Historical rank-3 entry point.
+
+    .. deprecated::
+        ``fused_stencil3d`` is deprecated; use :func:`fused_stencil_nd`
+        (rank-generic, same keyword surface plus ``unroll`` and
+        ``fuse_steps``).
+    """
+    import warnings
+
+    warnings.warn(
+        "fused_stencil3d is deprecated; use fused_stencil_nd",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return fused_stencil_nd(
         f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
         block=block, interpret=interpret,

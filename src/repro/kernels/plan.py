@@ -59,9 +59,11 @@ def strategy_sid(
     rank: int,
     unroll: int = 1,
     fuse_steps: int | str = 1,
+    batch: int = 1,
 ) -> str:
     """Canonical strategy-id derivation — the ONE place the stream
-    axis, unroll factor and temporal depth join the cache key.
+    axis, unroll factor, temporal depth and ensemble batch extent join
+    the cache key.
 
     Used by both :attr:`StencilPlan.strategy_id` and the tuning layer's
     key mirror (``repro.tuning.session.fused_nd_key``), so the two can
@@ -69,7 +71,10 @@ def strategy_sid(
     the string ``"auto"`` (the joint block/depth search's ``:fauto``
     suffix). ``strategy`` may be ``"auto"`` (the cross-strategy search,
     which also owns the stream-axis decision — keyed ``:sauto``, so an
-    auto record never collides with a per-strategy one).
+    auto record never collides with a per-strategy one). ``batch > 1``
+    appends ``:b{B}`` — a block tuned for a B-member ensemble launch is
+    never replayed for a single-member one (the VMEM working set and
+    amortized traffic both change with B).
     """
     sid = strategy
     if strategy == "swc_stream":
@@ -82,6 +87,8 @@ def strategy_sid(
         sid += ":fauto"
     elif fuse_steps != 1:
         sid += f":f{fuse_steps}"
+    if batch != 1:
+        sid += f":b{batch}"
     return sid
 
 
@@ -136,10 +143,17 @@ class StencilPlan:
     n_aux: int = 0
     unroll: int = 1  # element-wise unroll along x
     fuse_steps: int = 1  # temporal fusion depth (in-kernel time steps)
+    # Ensemble batch extent: the kernel walks `batch` independent members
+    # per block (member-major along the leading field axis), sharing one
+    # halo window/prologue per launch step. batch > 1 joins strategy_id
+    # as :b{B} so batched records key separately.
+    batch: int = 1
 
     def __post_init__(self):
         if self.rank not in (1, 2, 3):
             raise ValueError(f"rank must be 1, 2 or 3, got {self.rank}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
         if self.strategy not in STRATEGIES:
             raise ValueError(
                 f"strategy {self.strategy!r} not in {STRATEGIES}"
@@ -169,6 +183,13 @@ class StencilPlan:
         if self.fuse_steps < 1:
             raise ValueError(
                 f"fuse_steps must be >= 1, got {self.fuse_steps}"
+            )
+        if self.batch > 1 and self.n_aux and self.fuse_steps > 1:
+            raise ValueError(
+                "batched temporal fusion with aux carries is not "
+                "supported: the member-major output interleaves field "
+                "and carry rows between sweeps — use batch=1 or "
+                "fuse_steps=1 with aux inputs"
             )
         if self.fuse_steps > 1:
             if self.unroll != 1:
@@ -250,13 +271,15 @@ class StencilPlan:
 
     @property
     def strategy_id(self) -> str:
-        """Strategy component of the cache key; the stream axis, unroll
-        and temporal fusion depth are codegen configuration, so they
-        join the key (via :func:`strategy_sid`) — depth-1 and depth-2
-        plans cache separately, and a y-streaming rank-2 plan
-        (``swc_stream:sy``) never collides with a pipelined one."""
+        """Strategy component of the cache key; the stream axis, unroll,
+        temporal fusion depth and batch extent are codegen
+        configuration, so they join the key (via :func:`strategy_sid`)
+        — depth-1 and depth-2 plans cache separately, a y-streaming
+        rank-2 plan (``swc_stream:sy``) never collides with a pipelined
+        one, and a B-member ensemble plan keys as ``:b{B}``."""
         return strategy_sid(
-            self.strategy, self.rank, self.unroll, self.fuse_steps
+            self.strategy, self.rank, self.unroll, self.fuse_steps,
+            self.batch,
         )
 
     def tuning_key(self, backend: str | None = None):
@@ -287,12 +310,17 @@ def plan_stencil(
     n_aux: int = 0,
     unroll: int = 1,
     fuse_steps: int = 1,
+    batch: int | None = None,
 ) -> StencilPlan:
     """Lower a fused-stencil problem to a :class:`StencilPlan`.
 
     ``padded_shape`` is the (n_f, *spatial_padded) operand shape (spatial
     axes padded by ``ops.radius_per_axis() * fuse_steps`` — temporal
-    fusion consumes one radius of ghost cells per in-kernel sweep).
+    fusion consumes one radius of ghost cells per in-kernel sweep), or
+    the batched (batch, n_f, *spatial_padded) shape of an ensemble
+    operand — a leading extent beyond rank+1 axes is read as the batch.
+    An explicit ``batch`` kwarg must agree with a batched shape (and
+    turns a rank+1 shape into a plan for a B-member launch).
     ``block`` may be ``None`` (per-rank default), an int (rank-1
     shorthand), or a tuple; a tuple longer than the rank keeps its
     trailing entries (x-last convention, so a 3-D default like
@@ -304,10 +332,24 @@ def plan_stencil(
     radii = ops.radius_per_axis()
     if fuse_steps < 1:
         raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    padded_shape = tuple(padded_shape)
+    if len(padded_shape) == rank + 2:
+        shape_batch = int(padded_shape[0])
+        if batch is not None and int(batch) != shape_batch:
+            raise ValueError(
+                f"explicit batch={batch} disagrees with the batched "
+                f"operand shape {padded_shape} (leading extent "
+                f"{shape_batch})"
+            )
+        batch = shape_batch
+        padded_shape = padded_shape[1:]
+    elif batch is None:
+        batch = 1
     if len(padded_shape) != rank + 1:
         raise ValueError(
-            f"padded operand must be (n_f, *spatial) with {rank} spatial "
-            f"dims, got shape {tuple(padded_shape)}"
+            f"padded operand must be (n_f, *spatial) or "
+            f"(batch, n_f, *spatial) with {rank} spatial dims, got "
+            f"shape {tuple(padded_shape)}"
         )
     interior = tuple(
         padded_shape[1 + a] - 2 * radii[a] * fuse_steps
@@ -368,6 +410,7 @@ def plan_stencil(
         n_aux=int(n_aux),
         unroll=int(unroll),
         fuse_steps=int(fuse_steps),
+        batch=int(batch),
     )
 
 
@@ -383,7 +426,8 @@ def plan_from_record(
     """Reconstruct the :class:`StencilPlan` a resolved tuning record
     lowers to — the warm-cache side of the ``strategy="auto"`` contract.
 
-    ``interior_shape`` is the UNPADDED (n_f, *spatial) operand shape and
+    ``interior_shape`` is the UNPADDED (n_f, *spatial) — or batched
+    (batch, n_f, *spatial) — operand shape and
     ``record`` a :class:`~repro.tuning.cache.TuningRecord` whose
     ``strategy_resolved``/``stream``/``block``/``fuse_steps`` fields
     were persisted by the cross-strategy search. Returns ``None`` for a
@@ -397,8 +441,9 @@ def plan_from_record(
         return None
     depth = int(record.fuse_steps)
     radii = ops.radius_per_axis()
-    padded = tuple(interior_shape[:1]) + tuple(
-        n + 2 * r * depth for n, r in zip(interior_shape[1:], radii)
+    lead = len(tuple(interior_shape)) - ops.ndim  # 1, or 2 when batched
+    padded = tuple(interior_shape[:lead]) + tuple(
+        n + 2 * r * depth for n, r in zip(interior_shape[lead:], radii)
     )
     return plan_stencil(
         ops, padded, n_out, strategy=strategy,

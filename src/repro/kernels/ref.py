@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -122,6 +123,47 @@ def fused_stencil_steps(
                 )
             ]
     return out  # unreachable (n_steps >= 1); keeps type checkers happy
+
+
+def fused_stencil_batched(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi: Callable[..., jnp.ndarray],
+    aux: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Batched (ensemble) oracle: ``vmap`` of :func:`fused_stencil`
+    over a leading member axis.
+
+    ``f_padded``: (batch, n_f, *spatial_padded); ``aux`` (if given):
+    (batch, n_aux, *spatial). Returns (batch, n_out, *interior). This
+    is the ground truth every batched Pallas lowering must match —
+    member m of the batched kernel output is bit-tolerance-identical to
+    the single-member path applied to member m alone.
+    """
+    if aux is None:
+        return jax.vmap(lambda f: fused_stencil(f, ops, phi))(f_padded)
+    return jax.vmap(
+        lambda f, a: fused_stencil(f, ops, phi, aux=a)
+    )(f_padded, aux)
+
+
+def fused_stencil_steps_batched(
+    f_padded: jnp.ndarray,
+    ops: OperatorSet,
+    phi,
+    n_steps: int,
+    aux: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Batched sequential reference for temporal fusion: ``vmap`` of
+    :func:`fused_stencil_steps` over a leading member axis (see
+    :func:`fused_stencil_batched` for the operand convention)."""
+    if aux is None:
+        return jax.vmap(
+            lambda f: fused_stencil_steps(f, ops, phi, n_steps)
+        )(f_padded)
+    return jax.vmap(
+        lambda f, a: fused_stencil_steps(f, ops, phi, n_steps, aux=a)
+    )(f_padded, aux)
 
 
 def conv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

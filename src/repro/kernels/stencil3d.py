@@ -30,11 +30,19 @@ def fused_stencil3d_pallas(
 ) -> jnp.ndarray:
     """Apply the fused φ(A·B) update over a padded (n_f, z, y, x) domain.
 
-    Thin wrapper: lowers to a rank-3 :class:`~repro.kernels.plan.StencilPlan`
-    and hands it to the rank-generic emitter. See ``repro.kernels.emit``
-    for the strategy semantics (``swc`` pipelined, ``swc_stream``
-    explicit z-streaming, paper Figs. 5a/5b).
+    .. deprecated::
+        ``fused_stencil3d_pallas`` is deprecated; use
+        ``repro.kernels.ops.fused_stencil_nd`` (rank-generic, handles
+        padding/interpret defaults) or the ``plan_stencil`` →
+        ``fused_stencil_pallas`` pipeline directly.
     """
+    import warnings
+
+    warnings.warn(
+        "fused_stencil3d_pallas is deprecated; use fused_stencil_nd",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     plan = plan_stencil(
         ops, f_padded.shape, n_out, strategy=strategy, block=block,
         dtype=str(f_padded.dtype),

@@ -1,7 +1,11 @@
-"""Serving driver: batched decode with KV caches.
+"""LM serving driver: batched decode with KV caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
         --reduced --batch 4 --steps 32
+
+This front door is decode-only language-model serving. Stencil
+simulation workloads (ensemble batching over the fused engine) have
+their own entry point: ``python -m repro.launch.serve_sim``.
 """
 from __future__ import annotations
 
@@ -29,7 +33,9 @@ def main() -> None:
                     help="resolve Pallas kernel blocks from the persistent "
                          "tuning cache (no effect on the pure-decode loop, "
                          "which uses the recurrent einsum path; applies if "
-                         "a Pallas kernel enters the serving graph)")
+                         "a Pallas kernel enters the serving graph — "
+                         "stencil serving, where tuning IS load-bearing, "
+                         "lives in repro.launch.serve_sim --auto-tune)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -45,7 +51,11 @@ def main() -> None:
         print(f"auto-tune: enabled; cache at {tuning.default_cache_dir()} "
               f"(decode path has no Pallas kernels to warm)")
     if cfg.is_encdec:
-        raise SystemExit("use examples/serve_batched.py for enc-dec")
+        raise SystemExit(
+            "repro.launch.serve is decoder-only LM serving; enc-dec "
+            "decode is examples/serve_batched.py territory, and stencil "
+            "simulations are served by `python -m repro.launch.serve_sim`"
+        )
     mesh = make_mesh((1, 1), ("data", "model"))
     shlib.set_rules(mesh)
 

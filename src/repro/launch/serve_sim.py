@@ -1,0 +1,358 @@
+"""Ensemble simulation serving: the stencil-workload front door.
+
+``repro.launch.serve`` serves language-model decode; THIS module serves
+stencil simulations — thousands of concurrent scenarios (parameter
+sweeps, Monte-Carlo ensembles, per-user simulations) funneled through
+the batched fused-stencil engine:
+
+* ``SimRequest`` / ``RequestQueue`` — FIFO request intake with
+  shape-bucketed draining: requests sharing (spatial shape, dtype,
+  n_steps) form one plan-compatible group, and the oldest request's
+  bucket is served first (head-of-line FIFO, no starvation).
+* ``SimServer`` — one batched ``FusedStencilOp`` per bucket, stacked
+  to a (B, n_f, *spatial) operand so one kernel walks all B members
+  per block (member-major grid, shared halo — the batch axis of
+  ``StencilPlan``). Ops are cached per bucket and ``block="auto"``
+  resolves through the persistent tuning cache, so the first batch of
+  a bucket warms the ``:b{B}``-keyed record and every later batch
+  replays it.
+* ``StragglerMonitor`` hooks (``repro.ft.supervisor``) — per-batch
+  wall times feed the trailing-median monitor; a slow batch is flagged
+  (and counted in the serve report) exactly like a slow training step.
+
+Run:  PYTHONPATH=src python -m repro.launch.serve_sim --smoke
+
+``--smoke`` serves a small mixed-shape queue, asserts batched-vs-vmap
+parity per request, and writes a ``BENCH_serve.json`` throughput
+artifact (CI serve-smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import FusedStencilOp, integrate
+from repro.ft.supervisor import StragglerMonitor
+from repro.physics.diffusion import DiffusionProblem
+
+# (spatial shape, dtype string, n_steps): requests sharing a key lower
+# through ONE batched plan (same domain/dtype) for the SAME step count.
+BucketKey = tuple[tuple[int, ...], str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimRequest:
+    """One ensemble member: advance ``f0`` (n_f, *spatial) by
+    ``n_steps`` diffusion steps."""
+
+    req_id: int
+    f0: jnp.ndarray
+    n_steps: int
+
+    @property
+    def bucket_key(self) -> BucketKey:
+        return (
+            tuple(int(n) for n in self.f0.shape[1:]),
+            str(self.f0.dtype),
+            int(self.n_steps),
+        )
+
+
+class RequestQueue:
+    """FIFO request queue with bucket-aware batch draining.
+
+    Generic over the request type: the LM example
+    (``examples/serve_batched.py``) pops one request at a time into
+    freed decode slots; ensemble serving drains plan-compatible batches
+    with :meth:`next_bucket`.
+    """
+
+    def __init__(self, items=()):
+        self._items = list(items)
+
+    def push(self, item) -> None:
+        self._items.append(item)
+
+    def pop(self):
+        """Oldest request, or None when empty (LM slot refill)."""
+        return self._items.pop(0) if self._items else None
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def next_bucket(self, bucket_of: Callable, max_batch: int):
+        """Drain up to ``max_batch`` requests sharing the OLDEST
+        request's bucket key (head-of-line FIFO: the oldest waiting
+        request is always served in the next batch). Returns
+        ``(key, requests)`` or None when empty."""
+        if not self._items:
+            return None
+        key = bucket_of(self._items[0])
+        taken, kept = [], []
+        for item in self._items:
+            if len(taken) < max_batch and bucket_of(item) == key:
+                taken.append(item)
+            else:
+                kept.append(item)
+        self._items = kept
+        return key, taken
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """One executed batch: bucket, members, and the timing the
+    straggler monitor saw."""
+
+    index: int
+    key: BucketKey
+    batch: int
+    seconds: float
+    straggler: bool
+
+
+class SimServer:
+    """Shape-bucketed batch server over the batched fused engine.
+
+    One ``FusedStencilOp`` per bucket (built lazily, cached for the
+    server's lifetime — ``op_builds`` counts cache misses); requests
+    are stacked member-major to (B, n_f, *spatial) and integrated in
+    one batched call per bucket. ``batch_hook(index, requests)`` runs
+    inside the timed region — the fault-injection seam for straggler
+    tests, mirroring ``failure_at`` in ``ft.supervisor.Supervisor``.
+    """
+
+    def __init__(
+        self,
+        *,
+        strategy: str = "swc",
+        block=None,
+        accuracy: int = 2,
+        alpha: float = 1.0,
+        max_batch: int = 8,
+        straggler: StragglerMonitor | None = None,
+        batch_hook: Callable[[int, list], None] | None = None,
+    ):
+        self.strategy = strategy
+        self.block = block
+        self.accuracy = accuracy
+        self.alpha = alpha
+        self.max_batch = max_batch
+        self.straggler = straggler or StragglerMonitor()
+        self.batch_hook = batch_hook
+        self.reports: list[BatchReport] = []
+        self.op_builds = 0
+        self._ops: dict[tuple[tuple[int, ...], str], FusedStencilOp] = {}
+        self._warmed: set = set()
+
+    def _op_for(self, key: BucketKey) -> FusedStencilOp:
+        shape, dtype, _ = key
+        op_key = (shape, dtype)  # n_steps lives in integrate, not the plan
+        if op_key not in self._ops:
+            problem = DiffusionProblem(
+                shape, accuracy=self.accuracy, alpha=self.alpha
+            )
+            self._ops[op_key] = problem.step_op(self.strategy, self.block)
+            self.op_builds += 1
+        return self._ops[op_key]
+
+    def serve(self, queue: RequestQueue) -> dict[int, np.ndarray]:
+        """Drain the queue; returns {req_id: final (n_f, *spatial)}."""
+        results: dict[int, np.ndarray] = {}
+        while queue:
+            key, reqs = queue.next_bucket(
+                lambda r: r.bucket_key, self.max_batch
+            )
+            op = self._op_for(key)
+            fb = jnp.stack([r.f0 for r in reqs])  # (B, n_f, *spatial)
+            warm_key = (key[0], key[1], len(reqs))
+            if (
+                (self.block == "auto" or self.strategy == "auto")
+                and warm_key not in self._warmed
+            ):
+                # Eager warm call OUTSIDE lax control flow: a cache miss
+                # runs the rank-then-measure search and persists the
+                # measured :b{B} record; under integrate's scan tracing
+                # it could only have written a cost-model record.
+                jax.block_until_ready(op(fb))
+                self._warmed.add(warm_key)
+            index = len(self.reports)
+            t0 = time.perf_counter()
+            if self.batch_hook is not None:
+                self.batch_hook(index, reqs)
+            out = jax.block_until_ready(integrate(op, fb, key[2]))
+            dt = time.perf_counter() - t0
+            flagged = self.straggler.record(index, dt)
+            self.reports.append(
+                BatchReport(index, key, len(reqs), dt, flagged)
+            )
+            for member, req in enumerate(reqs):
+                results[req.req_id] = np.asarray(out[member])
+        return results
+
+
+# ---------------------------------------------------------------------------
+# CLI: smoke queue, parity check, BENCH_serve.json artifact.
+# ---------------------------------------------------------------------------
+
+
+def demo_queue(
+    shapes, n_steps: int, requests: int, seed: int = 0
+) -> RequestQueue:
+    """Mixed-shape request stream: round-robin over ``shapes`` so every
+    bucket interleaves with the others in FIFO order."""
+    rng = np.random.default_rng(seed)
+    queue = RequestQueue()
+    for rid in range(requests):
+        shape = shapes[rid % len(shapes)]
+        f0 = jnp.asarray(
+            rng.uniform(-1e-5, 1e-5, size=(1,) + shape), jnp.float32
+        )
+        queue.push(SimRequest(rid, f0, n_steps))
+    return queue
+
+
+def _vmap_reference(server: SimServer, reqs: list[SimRequest]):
+    """The oracle the batched path must match: vmap of the SINGLE-member
+    op over the stacked ensemble (B independent lowerings' numerics,
+    one launch per member)."""
+    key = reqs[0].bucket_key
+    problem = DiffusionProblem(
+        key[0], accuracy=server.accuracy, alpha=server.alpha
+    )
+    op = problem.step_op("hwc")
+    fb = jnp.stack([r.f0 for r in reqs])
+    return jax.vmap(lambda f: integrate(op, f, key[2]))(fb)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            check=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _write_bench(path: str, rows: list[dict], smoke: bool) -> None:
+    """BENCH_*.json with the benchmarks/run.py row schema (name,
+    us_per_call, derived + device/git_sha stamps) so the CI artifact
+    pipeline treats serving throughput like any other perf row."""
+    from repro.tuning.cache import current_backend
+
+    device, sha = current_backend(), _git_sha()
+    payload = {
+        "schema": 1,
+        "device": device,
+        "git_sha": sha,
+        "smoke": smoke,
+        "rows": [
+            {**row, "device": device, "git_sha": sha} for row in rows
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(rows)} row(s) to {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Batched stencil-simulation serving loop"
+    )
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--steps", type=int, default=8,
+                    help="diffusion steps per request")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="largest ensemble batch per kernel launch")
+    ap.add_argument("--strategy", default="swc",
+                    choices=("hwc", "swc", "swc_stream", "auto"))
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="resolve the batched kernel block from the "
+                         "persistent tuning cache (block='auto': the "
+                         "first batch of each bucket tunes and persists "
+                         "a :b{B}-keyed record, later batches replay it)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small mixed-shape queue + batched-vs-vmap "
+                         "parity assertion (CI serve-smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write throughput rows as BENCH JSON "
+                         "(default BENCH_serve.json under --smoke)")
+    args = ap.parse_args()
+
+    shapes = [(16, 32), (12, 24)] if args.smoke else [(32, 64), (24, 48)]
+    block = "auto" if (args.auto_tune or args.strategy == "auto") else None
+    server = SimServer(
+        strategy=args.strategy, block=block, max_batch=args.max_batch
+    )
+    queue = demo_queue(shapes, args.steps, args.requests)
+    by_id = {r.req_id: r for r in queue._items}
+
+    t0 = time.time()
+    results = server.serve(queue)
+    wall = time.time() - t0
+    assert len(results) == args.requests
+
+    members = sum(rep.batch for rep in server.reports)
+    stragglers = sum(rep.straggler for rep in server.reports)
+    print(
+        f"served {args.requests} request(s) in {len(server.reports)} "
+        f"batch(es) / {server.op_builds} op build(s), {wall:.2f}s "
+        f"({members * args.steps / wall:.1f} member-steps/s, "
+        f"{stragglers} straggler(s))"
+    )
+
+    rows = []
+    for rep in server.reports:
+        shape = "x".join(map(str, rep.key[0]))
+        rows.append({
+            "name": f"serve/{shape}/b{rep.batch}",
+            "us_per_call": rep.seconds * 1e6,
+            "derived": (
+                f"n_steps={rep.key[2]};batch={rep.batch};"
+                f"strategy={args.strategy};straggler={int(rep.straggler)}"
+            ),
+        })
+
+    if args.smoke:
+        # Parity: the batched lowering must match vmap of the
+        # single-member path on every request (f32 workload, so bound
+        # the difference relative to the field scale).
+        max_err = 0.0
+        for key in {r.bucket_key for r in by_id.values()}:
+            reqs = [r for r in by_id.values() if r.bucket_key == key]
+            expect = np.asarray(_vmap_reference(server, reqs))
+            got = np.stack([results[r.req_id] for r in reqs])
+            scale = float(np.abs(expect).max())
+            err = float(np.abs(got - expect).max())
+            max_err = max(max_err, err)
+            assert err <= 1e-5 * max(scale, 1e-30), (
+                f"batched-vs-vmap parity failed for bucket {key}: "
+                f"max abs err {err:.2e} at field scale {scale:.2e}"
+            )
+        rows.append({
+            "name": "serve/parity",
+            "us_per_call": 0.0,
+            "derived": f"max_abs_err={max_err:.3e};status=ok",
+        })
+        print(f"batched-vs-vmap parity OK (max abs err {max_err:.2e})")
+
+    json_path = args.json or ("BENCH_serve.json" if args.smoke else None)
+    if json_path:
+        _write_bench(json_path, rows, args.smoke)
+    print("serve_sim OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.core.trafficmodel import (
+    stencil_batched_hbm_bytes_per_member_step,
     stencil_hbm_bytes_per_step,
     stencil_redundant_compute_fraction,
     stencil_stream_hbm_bytes_per_step,
@@ -73,6 +74,8 @@ def vmem_working_set(
     itemsize: int,
     fuse_steps: int = 1,
     stream: bool = False,
+    *,
+    batch: int = 1,
 ) -> int:
     """VMEM footprint of one block, any rank. Temporal fusion widens
     the staged window to ``radii * fuse_steps`` and holds one
@@ -82,7 +85,16 @@ def vmem_working_set(
     instead: the working buffer (tile + widened halo on every axis),
     two prefetch buffers (τ₀ fresh planes × the cross window), and the
     output staging tile — the shapes ``emit._fused_stream`` allocates.
+
+    ``batch`` is the ensemble extent of a batched launch: the member-
+    major lowering stages all B members' field rows in one window, so
+    every field-count term scales by B — which is why the batched
+    candidate enumeration picks smaller blocks at larger B.
     """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    n_f = n_f * batch
+    n_out = n_out * batch
     if stream:
         work, pf, mid, out = n_f, n_f, n_f if fuse_steps > 1 else 0, n_out
         for a, (t, r) in enumerate(zip(block, radii)):
@@ -138,6 +150,7 @@ def enumerate_candidates_nd(
     axis_options: Sequence[Sequence[int]] | None = None,
     fuse_steps_options: Sequence[int] = (1,),
     stream_options: Sequence[bool] = (False,),
+    batch: int = 1,
 ) -> list[Candidate]:
     """Generate, filter (divisibility + VMEM + the tiny-block guard),
     and rank (block, fuse_steps, stream) configurations for a
@@ -160,6 +173,13 @@ def enumerate_candidates_nd(
     1, where the grid-step count is the only parallel axis — short
     blocks that don't amortize the per-step pipeline overhead. Lower is
     better.
+
+    ``batch > 1`` models a batched ensemble launch: the VMEM filter
+    scales every field-count term by B (so larger ensembles admit only
+    smaller blocks) and the traffic term switches to the per-member
+    batched model, which amortizes the fixed per-launch overhead over
+    B·fuse_steps — different B therefore rank (and admit) different
+    blocks/depths, which is why ``batch`` joins the tuning key.
     """
     domain = tuple(domain)
     rank = len(domain)
@@ -196,18 +216,25 @@ def enumerate_candidates_nd(
                 if not math.isfinite(ho):
                     continue  # tile swallowed by its widened halo
                 vm = vmem_working_set(
-                    blk, radii, n_f, n_out, itemsize, fuse, stream
+                    blk, radii, n_f, n_out, itemsize, fuse, stream,
+                    batch=batch,
                 )
                 if vm > vmem_budget:
                     continue  # the "failed launch" discard
-                traffic_fn = (
-                    stencil_stream_hbm_bytes_per_step
-                    if stream
-                    else stencil_hbm_bytes_per_step
-                )
-                traffic = traffic_fn(
-                    domain, blk, radii, n_f, n_out, itemsize, fuse
-                ) / ideal_bytes
+                if batch == 1:
+                    traffic_fn = (
+                        stencil_stream_hbm_bytes_per_step
+                        if stream
+                        else stencil_hbm_bytes_per_step
+                    )
+                    traffic = traffic_fn(
+                        domain, blk, radii, n_f, n_out, itemsize, fuse
+                    ) / ideal_bytes
+                else:
+                    traffic = stencil_batched_hbm_bytes_per_member_step(
+                        domain, blk, radii, n_f, n_out, itemsize,
+                        batch=batch, fuse_steps=fuse, stream=stream,
+                    ) / ideal_bytes
                 redundancy = stencil_redundant_compute_fraction(
                     blk, radii, fuse
                 )
@@ -273,6 +300,7 @@ def enumerate_cross_strategy_nd(
     vmem_budget: int = VMEM_BUDGET,
     fuse_steps_options: Sequence[int] = (1,),
     stream_ok: bool = True,
+    batch: int = 1,
 ) -> list[Candidate]:
     """The ``strategy="auto"`` candidate space: every ``swc`` and (rank
     ≥ 2, ``stream_ok``) ``swc_stream`` configuration the joint
@@ -289,6 +317,7 @@ def enumerate_cross_strategy_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=fuse_steps_options,
         stream_options=(False, True) if stream_ok else (False,),
+        batch=batch,
     )
     out = [hwc_candidate(domain, min(fuse_steps_options))] + cands
     out.sort(key=lambda c: (c.score, c.vmem_bytes))
@@ -307,8 +336,20 @@ def enumerate_candidates(
     ty_options: Sequence[int] = (4, 8, 16, 32),
     tz_options: Sequence[int] = (2, 4, 8, 16, 32),
 ) -> list[Candidate]:
-    """Rank-3 enumeration (historical signature) — delegates to
-    :func:`enumerate_candidates_nd`."""
+    """Rank-3 enumeration (historical signature).
+
+    .. deprecated::
+        ``enumerate_candidates`` is deprecated; use
+        :func:`enumerate_candidates_nd` (rank-generic, with
+        ``axis_options`` in axis order, x last).
+    """
+    import warnings
+
+    warnings.warn(
+        "enumerate_candidates is deprecated; use enumerate_candidates_nd",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         axis_options=(tz_options, ty_options, tx_options),
@@ -352,8 +393,19 @@ def domain_axis_options(
     ty_base: Sequence[int] = Y_BASE,
     tz_base: Sequence[int] = Z_BASE,
 ) -> tuple[tuple[int, ...], tuple[int, ...], tuple[int, ...]]:
-    """Rank-3 per-axis options (historical signature; see
-    :func:`axis_tile_options`)."""
+    """Rank-3 per-axis options (historical signature).
+
+    .. deprecated::
+        ``domain_axis_options`` is deprecated; use
+        :func:`axis_tile_options` (rank-generic).
+    """
+    import warnings
+
+    warnings.warn(
+        "domain_axis_options is deprecated; use axis_tile_options",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     nz, ny, nx = domain
 
     def opts(n: int, base: Sequence[int]) -> tuple[int, ...]:

@@ -206,20 +206,22 @@ def fused_nd_key(
     backend: str | None = None,
     unroll: int = 1,
     fuse_steps: int | str = 1,
+    batch: int = 1,
 ) -> TuningKey:
     """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``).
 
     The strategy id — stream axis (``swc_stream`` → ``:sz`` at rank 3,
-    ``:sy`` at rank 2), unroll and ``fuse_steps`` suffixes — comes from
-    the plan layer's canonical ``strategy_sid`` derivation, so this
-    mirror can never diverge from ``StencilPlan.strategy_id``; depth-1
-    and depth-2 problems cache separately and the joint block/depth
-    search keys as ``:fauto``.
+    ``:sy`` at rank 2), unroll, ``fuse_steps`` and ensemble ``batch``
+    suffixes — comes from the plan layer's canonical ``strategy_sid``
+    derivation, so this mirror can never diverge from
+    ``StencilPlan.strategy_id``; depth-1 and depth-2 problems cache
+    separately, the joint block/depth search keys as ``:fauto``, and a
+    B-member ensemble problem keys as ``:b{B}``.
     """
     from repro.kernels.plan import strategy_sid
 
     rank = len(domain)
-    sid = strategy_sid(strategy, rank, unroll, fuse_steps)
+    sid = strategy_sid(strategy, rank, unroll, fuse_steps, batch)
     return TuningKey(
         kernel=f"fused_stencil{rank}d",
         strategy=sid,
@@ -241,7 +243,18 @@ def fused3d_key(
     strategy: str,
     backend: str | None = None,
 ) -> TuningKey:
-    """Historical rank-3 alias of :func:`fused_nd_key`."""
+    """Historical rank-3 alias.
+
+    .. deprecated::
+        ``fused3d_key`` is deprecated; use :func:`fused_nd_key`.
+    """
+    import warnings
+
+    warnings.warn(
+        "fused3d_key is deprecated; use fused_nd_key",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return fused_nd_key(domain, radii, n_f, n_out, dtype, strategy, backend)
 
 
@@ -255,11 +268,13 @@ def fused_nd_candidates(
     vmem_budget: int = VMEM_BUDGET,
     fuse_steps_options: Sequence[int] = (1,),
     stream: bool = False,
+    batch: int = 1,
 ) -> list[Candidate]:
     """Structurally-ranked (block, fuse_steps) configurations for a
     rank-1/2/3 domain (``stream=True`` scores every candidate with the
     explicit-streaming traffic/VMEM model — the ``swc_stream`` search
-    space), with graceful degradation: if nothing fits the VMEM budget,
+    space; ``batch > 1`` with the batched per-member VMEM/traffic
+    model), with graceful degradation: if nothing fits the VMEM budget,
     re-enumerate without the filter and keep only the smallest-footprint
     shape so ``auto`` still resolves (marked ``fallback`` by the
     caller)."""
@@ -267,14 +282,14 @@ def fused_nd_candidates(
     cands = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=fuse_steps_options,
-        stream_options=stream_options,
+        stream_options=stream_options, batch=batch,
     )
     if cands:
         return cands
     unfiltered = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=2**63,
         fuse_steps_options=fuse_steps_options,
-        stream_options=stream_options,
+        stream_options=stream_options, batch=batch,
     )
     if not unfiltered:
         return []
@@ -291,7 +306,19 @@ def fused3d_candidates(
     *,
     vmem_budget: int = VMEM_BUDGET,
 ) -> list[Candidate]:
-    """Historical rank-3 alias of :func:`fused_nd_candidates`."""
+    """Historical rank-3 alias.
+
+    .. deprecated::
+        ``fused3d_candidates`` is deprecated; use
+        :func:`fused_nd_candidates`.
+    """
+    import warnings
+
+    warnings.warn(
+        "fused3d_candidates is deprecated; use fused_nd_candidates",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget
     )
@@ -322,14 +349,19 @@ def auto_block_nd(
     The cache key is derived from an actual planned ``StencilPlan`` (a
     probe lowering with the default block), so it always reflects the
     configuration the kernel will execute — e.g. an unroll factor the
-    planner degrades to 1 is keyed as 1."""
+    planner degrades to 1 is keyed as 1. A batched
+    (batch, n_f, *padded) ensemble operand keys as ``:b{B}`` and ranks
+    candidates with the batched VMEM/per-member traffic model."""
     from repro.kernels.plan import DEFAULT_BLOCKS, plan_stencil
 
     sess = session if session is not None else default_session()
+    batched = f_padded.ndim == ops.ndim + 2
+    n_aux = 0
+    if aux is not None:
+        n_aux = aux.shape[1] if batched else aux.shape[0]
     probe = plan_stencil(
         ops, f_padded.shape, n_out, strategy=strategy,
-        dtype=str(f_padded.dtype),
-        n_aux=aux.shape[0] if aux is not None else 0,
+        dtype=str(f_padded.dtype), n_aux=n_aux,
         unroll=unroll, fuse_steps=fuse_steps,
     )
     rank, domain, radii = probe.rank, probe.interior, probe.radii
@@ -340,6 +372,7 @@ def auto_block_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=(fuse_steps,),
         stream=probe.strategy == "swc_stream",
+        batch=probe.batch,
     )
     if not cands:  # degenerate domain: let the planner clamp a default
         return DEFAULT_BLOCKS[rank]
@@ -408,26 +441,34 @@ def auto_fuse_nd(
     Returns ``(block, fuse_steps)``.
 
     Depths that don't self-map (``n_out != n_f + n_aux``) can't fuse;
-    only depth 1 is enumerated for them.
+    only depth 1 is enumerated for them. A batched
+    (batch, n_f, *spatial) ensemble stack keys as ``:b{B}`` and ranks
+    with the batched VMEM/per-member traffic model.
     """
     sess = session if session is not None else default_session()
-    domain = tuple(f_interior.shape[1:])
+    batched = f_interior.ndim == ops.ndim + 2
+    batch = int(f_interior.shape[0]) if batched else 1
+    lead = 2 if batched else 1
+    domain = tuple(f_interior.shape[lead:])
     radii = ops.radius_per_axis()
-    n_f = f_interior.shape[0]
-    n_aux = aux.shape[0] if aux is not None else 0
+    n_f = f_interior.shape[lead - 1]
+    n_aux = aux.shape[lead - 1] if aux is not None else 0
     itemsize = f_interior.dtype.itemsize
     if isinstance(phi, (tuple, list)):
         depth_options = (len(phi),)  # a φ sequence pins the depth
     if n_out != n_f + n_aux:
         depth_options = (1,)
+    if batch > 1 and n_aux:
+        # Mirrors StencilPlan: batched temporal fusion can't carry aux.
+        depth_options = (1,)
     key = fused_nd_key(
         domain, radii, n_f, n_out, str(f_interior.dtype), strategy,
-        fuse_steps="auto",
+        fuse_steps="auto", batch=batch,
     )
     cands = fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=tuple(depth_options),
-        stream=strategy == "swc_stream",
+        stream=strategy == "swc_stream", batch=batch,
     )
     if not cands:
         from repro.kernels.plan import DEFAULT_BLOCKS
@@ -475,6 +516,9 @@ def _interior_measure_fn(
     strategy — ``hwc`` times the jitted XLA-managed reference (the
     measured baseline of the cross-strategy search), everything else
     the Pallas kernel at the candidate's block/depth/stream config.
+    Works for plain (n_f, *spatial) and batched (batch, n_f, *spatial)
+    operands alike — non-spatial leading axes are never padded, and the
+    hwc baseline times the vmap'd batched oracle.
     """
     import jax as _jax
     import jax.numpy as jnp
@@ -482,23 +526,40 @@ def _interior_measure_fn(
     from repro.kernels import ops as kops
     from repro.kernels import ref as kref
 
+    lead = f_interior.ndim - len(radii)  # 1, or 2 when batched
+
     def measure(cand):
         """Median per-step seconds for one candidate configuration."""
         depth = getattr(cand, "fuse_steps", 1)
         strategy = getattr(cand, "strategy", default_strategy) or (
             default_strategy
         )
-        pad = [(0, 0)] + [(r * depth,) * 2 for r in radii]
+        pad = [(0, 0)] * lead + [(r * depth,) * 2 for r in radii]
         fp = jnp.pad(f_interior, pad, mode="wrap")
         aux_p = aux
         if aux is not None and depth > 1:
-            apad = [(0, 0)] + [(r * (depth - 1),) * 2 for r in radii]
+            apad = [(0, 0)] * lead + [
+                (r * (depth - 1),) * 2 for r in radii
+            ]
             aux_p = jnp.pad(aux, apad, mode="wrap")
 
         if strategy == "hwc":
             # The XLA-managed path is always jitted when benchmarked —
             # time what the compiler-managed regime actually runs.
-            if depth == 1:
+            if lead == 2:
+                if depth == 1:
+                    hwc = _jax.jit(
+                        lambda f, a: kref.fused_stencil_batched(
+                            f, ops, phi, aux=a
+                        )
+                    )
+                else:
+                    hwc = _jax.jit(
+                        lambda f, a: kref.fused_stencil_steps_batched(
+                            f, ops, phi, depth, aux=a
+                        )
+                    )
+            elif depth == 1:
                 hwc = _jax.jit(
                     lambda f, a: kref.fused_stencil(f, ops, phi, aux=a)
                 )
@@ -570,10 +631,13 @@ def auto_strategy_nd(
     (``n_out != n_f + n_aux``) only enumerate depth 1.
     """
     sess = session if session is not None else default_session()
-    domain = tuple(f_interior.shape[1:])
+    batched = f_interior.ndim == ops.ndim + 2
+    batch = int(f_interior.shape[0]) if batched else 1
+    lead = 2 if batched else 1
+    domain = tuple(f_interior.shape[lead:])
     radii = ops.radius_per_axis()
-    n_f = f_interior.shape[0]
-    n_aux = aux.shape[0] if aux is not None else 0
+    n_f = f_interior.shape[lead - 1]
+    n_aux = aux.shape[lead - 1] if aux is not None else 0
     itemsize = f_interior.dtype.itemsize
     pinned = None  # explicitly requested depth (φ sequence or int)
     if isinstance(phi, (tuple, list)):
@@ -593,15 +657,20 @@ def auto_strategy_nd(
                 f"honor the pinned depth {pinned}"
             )
         depth_options = (1,)
+    if batch > 1 and n_aux and tuple(depth_options) != (1,):
+        # Mirrors StencilPlan: batched temporal fusion can't carry aux.
+        depth_options = (1,)
     key = fused_nd_key(
         domain, radii, n_f, n_out, str(f_interior.dtype), "auto",
         fuse_steps=fuse_steps if fuse_steps == "auto" else depth_options[0],
+        batch=batch,
     )
 
     cands = enumerate_cross_strategy_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=tuple(depth_options),
         stream_ok=len(domain) >= 2 and n_aux == 0,
+        batch=batch,
     )
     measure = None
     if _is_concrete(f_interior) and (aux is None or _is_concrete(aux)):
@@ -641,7 +710,18 @@ def auto_block_3d(
     session: TuningSession | None = None,
     vmem_budget: int = VMEM_BUDGET,
 ) -> tuple[int, int, int]:
-    """Historical rank-3 alias of :func:`auto_block_nd`."""
+    """Historical rank-3 alias.
+
+    .. deprecated::
+        ``auto_block_3d`` is deprecated; use :func:`auto_block_nd`.
+    """
+    import warnings
+
+    warnings.warn(
+        "auto_block_3d is deprecated; use auto_block_nd",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return auto_block_nd(
         f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
         interpret=interpret, session=session, vmem_budget=vmem_budget,
@@ -658,20 +738,24 @@ def lookup_fused_nd(
     fuse_steps: int | str = 1,
 ) -> TuningRecord | None:
     """Cached record for a fused stencil call on an UNPADDED field
-    stack (n_f, *spatial) — the read-only mirror of the key derivation
-    in ``auto_block_nd``/``auto_fuse_nd``, for benchmarks/examples that
+    stack (n_f, *spatial) — or batched (batch, n_f, *spatial), keying
+    as ``:b{B}`` — the read-only mirror of the key derivation in
+    ``auto_block_nd``/``auto_fuse_nd``, for benchmarks/examples that
     want to report which configuration ``"auto"`` resolved to. Pass
     ``fuse_steps="auto"`` to look up a joint block/depth record."""
     sess = session if session is not None else default_session()
+    batched = f_interior.ndim == ops.ndim + 2
+    lead = 2 if batched else 1
     key = fused_nd_key(
-        tuple(f_interior.shape[1:]),
+        tuple(f_interior.shape[lead:]),
         ops.radius_per_axis(),
-        f_interior.shape[0],
+        f_interior.shape[lead - 1],
         n_out,
         str(f_interior.dtype),
         strategy,
         unroll=unroll,
         fuse_steps=fuse_steps,
+        batch=int(f_interior.shape[0]) if batched else 1,
     )
     return sess.cache.get(key)
 
@@ -683,7 +767,18 @@ def lookup_fused3d(
     strategy: str,
     session: TuningSession | None = None,
 ) -> TuningRecord | None:
-    """Historical rank-3 alias of :func:`lookup_fused_nd`."""
+    """Historical rank-3 alias.
+
+    .. deprecated::
+        ``lookup_fused3d`` is deprecated; use :func:`lookup_fused_nd`.
+    """
+    import warnings
+
+    warnings.warn(
+        "lookup_fused3d is deprecated; use lookup_fused_nd",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return lookup_fused_nd(
         f_interior, ops, n_out, strategy, session=session
     )

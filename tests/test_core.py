@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import rooflinelib as rl
 from repro.tuning import (
-    enumerate_candidates,
+    enumerate_candidates_nd,
     halo_overhead,
     vmem_working_set,
 )
@@ -88,7 +88,7 @@ def test_operator_set_rejects_duplicate_names():
 
 
 def test_vmem_filter_discards_oversized_blocks():
-    cands = enumerate_candidates(
+    cands = enumerate_candidates_nd(
         (256, 256, 256), (3, 3, 3), n_f=8, n_out=8, itemsize=4,
         vmem_budget=2 * 1024 * 1024,
     )
@@ -108,7 +108,7 @@ def test_halo_overhead_monotone_in_block_size():
 
 
 def test_candidates_ranked_by_score():
-    cands = enumerate_candidates(
+    cands = enumerate_candidates_nd(
         (64, 64, 128), (3, 3, 3), n_f=8, n_out=8, itemsize=4
     )
     scores = [c.score for c in cands]

@@ -17,7 +17,6 @@ import pytest
 from repro.core.stencil import derivative_operator_set
 from repro.kernels import ops, ref
 from repro.kernels.stencil1d import xcorr1d_pallas
-from repro.kernels.stencil3d import fused_stencil3d_pallas
 
 RNG = np.random.default_rng(42)
 
@@ -77,7 +76,7 @@ def test_fused3d_sweep(strategy, accuracy, block):
         RNG.standard_normal((n_f, nz + 2 * r, ny + 2 * r, nx + 2 * r)),
         jnp.float32,
     )
-    out = fused_stencil3d_pallas(
+    out = ops.fused_stencil_nd(
         f, opset, _phi_test, 2, block=block, strategy=strategy,
         interpret=True,
     )
@@ -97,7 +96,7 @@ def test_fused3d_aux_inputs():
     def phi(d, a):
         return d["val"] * 0.5 + a * d["dxx"]
 
-    out = fused_stencil3d_pallas(
+    out = ops.fused_stencil_nd(
         f, opset, phi, 2, aux=aux, block=(4, 4, 8), strategy="swc",
         interpret=True,
     )

@@ -21,9 +21,9 @@ from repro.tuning import (
     TuningKey,
     TuningRecord,
     TuningSession,
-    fused3d_candidates,
+    fused_nd_candidates,
 )
-from repro.tuning.session import auto_block_3d
+from repro.tuning.session import auto_block_nd
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
@@ -111,7 +111,7 @@ def test_cache_put_merges_with_disk(cache_dir):
 
 
 def test_session_cache_hit_skips_measurement(cache_dir):
-    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
     calls = []
 
     def measure(cand):
@@ -129,7 +129,7 @@ def test_session_cache_hit_skips_measurement(cache_dir):
 def test_session_upgrades_model_record_when_measurable(cache_dir):
     """A cost-model record (persisted under jit tracing) is re-tuned —
     not returned from the fast path — once a caller can measure."""
-    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
     sess = TuningSession(top_k=2)
     traced = sess.tune(KEY, cands, measure=None)
     assert traced.source == "model"
@@ -148,7 +148,7 @@ def test_session_upgrades_model_record_when_measurable(cache_dir):
 
 
 def test_session_all_discarded_falls_back_to_model(cache_dir):
-    cands = fused3d_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
 
     def measure(cand):
         raise RuntimeError("launch failed")  # paper: discarded launches
@@ -181,7 +181,7 @@ def test_auto_block_vmem_fallback(cache_dir):
     r = opset.radius
     fp = jnp.pad(f, ((0, 0),) + ((r, r),) * 3, mode="wrap")
     before = sess_mod.MEASURE_COUNT
-    block = auto_block_3d(fp, opset, phi, 1, strategy="swc",
+    block = auto_block_nd(fp, opset, phi, 1, strategy="swc",
                           interpret=True, vmem_budget=64)
     assert sess_mod.MEASURE_COUNT == before  # no launches attempted
     rec = TuningCache().get(
@@ -189,7 +189,7 @@ def test_auto_block_vmem_fallback(cache_dir):
                   "float32", sess_mod.current_backend())
     )
     assert rec is not None and rec.source == "fallback"
-    out = kops.fused_stencil3d(
+    out = kops.fused_stencil_nd(
         fp, opset, phi, 1, strategy="swc", block=block, interpret=True
     )
     assert out.shape == (1, 8, 8, 16)
