@@ -18,10 +18,19 @@ which has no cross-stream axis), composing with ``--fuse-steps``.
 
 ``--strategies auto`` benchmarks ``strategy="auto"``: the
 cross-strategy tuning search picks the caching regime (hwc vs swc vs
-swc_stream) jointly with block/depth/stream, and the row's derived
-column reports which regime won (``auto_strategy=...``,
+swc_stream vs tc) jointly with block/depth/stream, and the row's
+derived column reports which regime won (``auto_strategy=...``,
 ``auto_depth=...``) so the decision lands in ``BENCH_summary.json``
 per shape.
+
+``--strategies tc`` benchmarks the MXU regime: derivative taps lower
+to banded coefficient-matrix contractions over the VMEM-resident
+block. Its rows carry two extra derived fields: ``tpu_mxu_bound_s``
+(the compute roof next to the bandwidth roof, so the summary can form
+``mxu_roofline_fraction``) and ``mxu_crossover_depth`` (the smallest
+temporal-fusion depth at which the cost model ranks a tc candidate
+above every VPU candidate — 0 when the VPU wins at every enumerated
+depth).
 """
 from __future__ import annotations
 
@@ -29,10 +38,44 @@ import jax
 import numpy as np
 
 from benchmarks.util import emit, smoke, time_fn
-from repro.core.rooflinelib import TPU_V5E
-from repro.core.trafficmodel import stencil_traffic_reduction
+from repro.core.rooflinelib import TPU_V5E, stencil_mxu_roof_s
+from repro.core.trafficmodel import (
+    stencil_mxu_flops_per_step,
+    stencil_traffic_reduction,
+)
+from repro.kernels.plan import tc_groups_per_axis
 from repro.physics.diffusion import DiffusionProblem
 from repro.tuning import format_block, lookup_fused_nd
+from repro.tuning.costmodel import enumerate_cross_strategy_nd
+
+
+def _mxu_crossover_depth(
+    shape: tuple[int, ...], radius: int, depths: tuple[int, ...] = (1, 2, 4, 8)
+) -> int:
+    """Smallest enumerated fusion depth where the cost model ranks some
+    tc candidate above every swc/swc_stream candidate of the same depth
+    (0 = the VPU wins everywhere): deeper fusion amortizes halo traffic
+    but multiplies VPU tap work, while the tc matmul rides the MXU —
+    the crossover the fig11 tc series exists to locate."""
+    ndim = len(shape)
+    cands = enumerate_cross_strategy_nd(
+        shape, (radius,) * ndim, 1, 1, 4, fuse_steps_options=depths
+    )
+    for depth in depths:
+        by_strat: dict[str, float] = {}
+        for c in cands:
+            if c.fuse_steps != depth or c.strategy == "hwc":
+                continue
+            prev = by_strat.get(c.strategy)
+            if prev is None or c.score < prev:
+                by_strat[c.strategy] = c.score
+        tc = by_strat.get("tc")
+        vpu = min(
+            (v for k, v in by_strat.items() if k != "tc"), default=None
+        )
+        if tc is not None and vpu is not None and tc < vpu:
+            return depth
+    return 0
 
 
 def run(
@@ -80,7 +123,7 @@ def run(
                         )
                     op = rop
                     steps_run = int(rop.fuse_steps)
-                elif strat in ("swc", "swc_stream"):
+                elif strat in ("swc", "swc_stream", "tc"):
                     op = p.step_op(strat, block="auto", fuse_steps=fuse_steps)
                     op(f0)  # eager: tune-and-persist on a cache miss
                     rec = lookup_fused_nd(
@@ -89,7 +132,19 @@ def run(
                     if rec is not None:
                         tuned = (f";tuned_block={format_block(rec.block)}"
                                  f";tuned_src={rec.source}")
-                        if fuse_steps != 1:
+                        if strat == "tc":
+                            flops = stencil_mxu_flops_per_step(
+                                shape, rec.block, (p.radius,) * ndim, 1,
+                                fuse_steps,
+                                groups_per_axis=tc_groups_per_axis(op.ops),
+                            )
+                            tuned += (
+                                f";tpu_mxu_bound_s="
+                                f"{stencil_mxu_roof_s(flops):.2e}"
+                                f";mxu_crossover_depth="
+                                f"{_mxu_crossover_depth(shape, p.radius)}"
+                            )
+                        if fuse_steps != 1 and strat != "tc":
                             ratio = stencil_traffic_reduction(
                                 shape, (p.radius,) * ndim, 1, 1, 4,
                                 block_base=rec.block,

@@ -1,10 +1,18 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSON.
 
     PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun.json
+
+When a ``BENCH_summary.json`` is present (repo root, or a second
+positional path) an extra section renders the stencil kernels' compute
+roof next to their bandwidth roof: ``tc`` rows carry an
+``mxu_roofline_fraction`` (time at peak MXU rate / measured time), so
+the table shows both fractions side by side and names the binding roof
+per kernel — the two-roof view the tc regime is tuned against.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -74,6 +82,34 @@ def collective_summary(rows) -> str:
     return "\n".join(out)
 
 
+def stencil_roof_table(kernels: dict) -> str:
+    """Two-roof table for BENCH_summary.json kernel entries: bandwidth
+    fraction for every roofline-comparable kernel, MXU fraction for the
+    ``tc`` rows that report one, and which roof binds (the larger
+    fraction is the nearer ceiling)."""
+    out = [
+        "| kernel | us/call | bw frac | mxu frac | binding roof |",
+        "|---|---|---|---|---|",
+    ]
+    for name in sorted(kernels):
+        k = kernels[name]
+        bw = k.get("roofline_fraction")
+        mxu = k.get("mxu_roofline_fraction")
+        if bw is None and mxu is None:
+            continue
+        binding = "—"
+        if mxu is not None:
+            binding = "compute (MXU)" if mxu > (bw or 0.0) else "memory (HBM)"
+        elif bw is not None:
+            binding = "memory (HBM)"
+        out.append(
+            f"| {name} | {k.get('us_per_call', 0):.1f} "
+            f"| {bw if bw is not None else '—'} "
+            f"| {mxu if mxu is not None else '—'} | {binding} |"
+        )
+    return "\n".join(out)
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
     rows = json.load(open(path))
@@ -94,6 +130,15 @@ def main() -> None:
         print("\n## Failures\n")
         for r in fail:
             print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: {r['error']}")
+    summary = sys.argv[2] if len(sys.argv) > 2 else "BENCH_summary.json"
+    if os.path.exists(summary):
+        try:
+            kernels = json.load(open(summary)).get("kernels", {})
+        except ValueError:
+            kernels = {}
+        if kernels:
+            print(f"\n## Stencil rooflines ({summary})\n")
+            print(stencil_roof_table(kernels))
 
 
 if __name__ == "__main__":

@@ -108,10 +108,21 @@ def summarize_rows(rows) -> dict:
             "gbps": round(gbps, 3),
             "roofline_fraction": round(fraction, 6),
         }
+        # tc rows additionally carry the MXU compute roof: report how
+        # close the measured time sits to it, the compute-side analogue
+        # of roofline_fraction (a tc kernel is compute-bound when its
+        # mxu fraction exceeds its bandwidth fraction).
+        if "tpu_mxu_bound_s" in derived:
+            entry["mxu_roofline_fraction"] = round(
+                float(derived["tpu_mxu_bound_s"]) / seconds, 6
+            )
         # Cross-strategy "auto" rows report which caching regime the
         # tuning search picked for this shape — forward the decision so
         # the consolidated summary records it per kernel.
-        for k in ("auto_strategy", "auto_depth", "tuned_block"):
+        for k in (
+            "auto_strategy", "auto_depth", "tuned_block",
+            "mxu_crossover_depth",
+        ):
             if k in derived:
                 entry[k] = derived[k]
         kernels[row["name"]] = entry
@@ -172,10 +183,12 @@ def main() -> None:
     ap.add_argument("--strategies", default=None, metavar="S[,S...]",
                     help="restrict/widen the caching-strategy sweep for "
                          "modules that take one (fig11), e.g. "
-                         "--strategies swc_stream, --strategies auto "
-                         "(cross-strategy tuning search; the chosen "
-                         "regime is reported per shape), or "
-                         "--strategies hwc,swc,swc_stream "
+                         "--strategies swc_stream, --strategies tc "
+                         "(MXU matmul lowering; rows gain "
+                         "tpu_mxu_bound_s/mxu_crossover_depth), "
+                         "--strategies auto (cross-strategy tuning "
+                         "search; the chosen regime is reported per "
+                         "shape), or --strategies hwc,swc,tc "
                          "(default: hwc,swc)")
     args = ap.parse_args()
     if args.fuse_steps < 1:
@@ -197,12 +210,12 @@ def main() -> None:
         )
         bad = [
             s for s in strategies
-            if s not in ("hwc", "swc", "swc_stream", "auto")
+            if s not in ("hwc", "swc", "swc_stream", "tc", "auto")
         ]
         if not strategies or bad:
             ap.error(
                 "--strategies entries must be in "
-                "{hwc, swc, swc_stream, auto}"
+                "{hwc, swc, swc_stream, tc, auto}"
             )
     header()
     for name in MODULES:

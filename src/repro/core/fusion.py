@@ -23,6 +23,11 @@ pipeline (planner → rank-generic emitter → tuning cache) except
                            spatial axis (z at rank 3, y at rank 2) with
                            carried halo + prefetch DMA (paper Fig. 5b on
                            TPU); composes with ``fuse_steps``
+  ``tc``         1, 2, 3   Pallas kernel, ``swc`` staging but tap evaluation
+                           lowered to banded coefficient-matrix contractions
+                           on the MXU (f32 accumulation; dtype f32/bf16
+                           only); composes with ``fuse_steps`` and the
+                           ensemble batch axis
   ============  =========  =====================================================
 
 The same object also runs *distributed* over a device mesh: the domain is
@@ -74,7 +79,7 @@ Phi = Callable[[Mapping[str, jnp.ndarray]], jnp.ndarray]
 # One callable (applied every fused step) or one per fused step.
 PhiLike = Union[Phi, tuple]
 
-STRATEGIES = ("hwc", "swc", "swc_stream", "auto")
+STRATEGIES = ("hwc", "swc", "swc_stream", "tc", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +94,8 @@ class FusedStencilOp:
             a sequence of ``fuse_steps`` per-sweep callables.
         n_out: number of output fields φ produces.
         boundary_mode: ψ — how ghost cells are filled ("periodic", …).
-        strategy: caching regime — "hwc", "swc", "swc_stream", or
+        strategy: caching regime — "hwc", "swc", "swc_stream", "tc"
+            (stencils on the matrix unit; f32/bf16 only), or
             "auto" (the cross-strategy tuning search picks the regime,
             block, depth and stream axis jointly and persists them in
             one record; see the module docstring).
@@ -169,13 +175,13 @@ class FusedStencilOp:
                     f"fuse_steps must be an int >= 1 or 'auto', got "
                     f"{self.fuse_steps!r}"
                 )
-            if self.strategy not in ("swc", "swc_stream", "auto") or (
-                self.block != "auto"
-            ):
+            if self.strategy not in (
+                "swc", "swc_stream", "tc", "auto"
+            ) or (self.block != "auto"):
                 raise ValueError(
                     "fuse_steps='auto' resolves through the joint "
                     "(block, depth) tuning search — it requires "
-                    "strategy='swc', 'swc_stream' or 'auto' and "
+                    "strategy='swc', 'swc_stream', 'tc' or 'auto' and "
                     "block='auto'"
                 )
         elif self.fuse_steps < 1:
@@ -284,7 +290,7 @@ class FusedStencilOp:
                 "(the kernel and its ghost-cell width depend on them) "
                 "— resolve via op.resolved(f)(f) or __call__"
             )
-        if self.strategy in ("swc", "swc_stream"):
+        if self.strategy in ("swc", "swc_stream", "tc"):
             return kops.fused_stencil_nd(
                 f_padded, self.ops, self.phi, self.n_out, aux=aux,
                 strategy=self.strategy, block=self.block,

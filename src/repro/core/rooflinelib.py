@@ -278,3 +278,15 @@ def stencil_ideal_bytes(
     """The paper's 'ideal performance' bound (Sec. 5.4): the domain is
     read and written exactly once at peak bandwidth."""
     return n_points * (n_f + n_out) * dtype_bytes
+
+
+def stencil_mxu_roof_s(
+    flops: float, dtype_bytes: int = 4, hw: HardwareSpec = TPU_V5E
+) -> float:
+    """Compute roof next to the bandwidth roof: seconds the strategy
+    ``"tc"`` matmul lowering needs at peak MXU rate for ``flops``
+    contraction FLOPs (``stencil_mxu_flops_per_step``). bf16 inputs run
+    the MXU at double the f32-accumulate rate, mirroring
+    ``trafficmodel.peak_mxu_flops``."""
+    peak = hw.peak_flops_bf16 if dtype_bytes == 2 else hw.peak_flops_f32
+    return flops / peak

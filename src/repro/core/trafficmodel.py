@@ -294,6 +294,118 @@ def stencil_redundant_compute_fraction(
     return total / (fuse_steps * tile) - 1.0
 
 
+# ---------------------------------------------------------------------------
+# MXU compute model (the tc caching regime: stencils as banded matmuls).
+# ---------------------------------------------------------------------------
+
+# Peak matrix-unit FLOP/s at f32 accumulation with f32 inputs, keyed by
+# a substring of the JAX device_kind / backend description. bf16 inputs
+# run the MXU at double rate (see :func:`peak_mxu_flops`). The default
+# matches ``repro.core.rooflinelib.TPU_V5E``.
+PEAK_MXU_FLOPS_F32: dict[str, float] = {
+    "v4": 137.5e12,
+    "v5e": 98.5e12,
+    "v5p": 229.5e12,
+    "v6e": 459.5e12,
+}
+DEFAULT_PEAK_MXU_FLOPS_F32 = 98.5e12  # v5e-class
+
+# Peak HBM bandwidth (bytes/s) per platform, same keying; used to
+# normalize the tc compute term against the bandwidth roof the traffic
+# scores are expressed in.
+PEAK_HBM_BW: dict[str, float] = {
+    "v4": 1228e9,
+    "v5e": 819e9,
+    "v5p": 2765e9,
+    "v6e": 1640e9,
+}
+DEFAULT_PEAK_HBM_BW = 819e9  # v5e-class
+
+
+def peak_mxu_flops(
+    backend: str | None = None, itemsize: int = 4
+) -> float:
+    """Platform peak MXU FLOP/s for the given input itemsize.
+
+    ``backend`` is matched as a substring against the platform table
+    (e.g. a device_kind like ``"TPU v5e"``); unknown/None falls back to
+    the v5e-class default. bf16 inputs (itemsize 2) double the rate —
+    the f32-accumulate contract the tc emitter lowers with.
+    """
+    base = DEFAULT_PEAK_MXU_FLOPS_F32
+    if backend:
+        b = backend.lower()
+        for key, v in PEAK_MXU_FLOPS_F32.items():
+            if key in b:
+                base = v
+                break
+    return base * (2.0 if itemsize == 2 else 1.0)
+
+
+def peak_hbm_bw(backend: str | None = None) -> float:
+    """Platform peak HBM bandwidth (bytes/s), same substring matching
+    as :func:`peak_mxu_flops`."""
+    if backend:
+        b = backend.lower()
+        for key, v in PEAK_HBM_BW.items():
+            if key in b:
+                return v
+    return DEFAULT_PEAK_HBM_BW
+
+
+def stencil_mxu_flops_per_step(
+    domain: Sequence[int],
+    block: Sequence[int],
+    radii: Sequence[int],
+    n_f: int,
+    fuse_steps: int = 1,
+    *,
+    groups_per_axis: Sequence[int] | None = None,
+) -> float:
+    """Modeled MXU FLOPs per simulated TIME step of a ``tc`` plan.
+
+    Each multi-tap contraction group on axis ``a`` (see
+    :func:`~repro.kernels.plan.tc_groups_per_axis`) contracts the FULL
+    staged window extent — the banded matrix is dense as far as the MXU
+    is concerned, zeros included — so the per-point cost is
+    ``2 · (τ_a + 2·r_a·(margin+1))`` FLOPs per group, growing with the
+    tile, not the tap count. That tile dependence is exactly the
+    VPU/MXU trade-off the cost model must see: big tiles amortize halo
+    traffic but inflate matmul work. Temporal sweeps evaluate over the
+    shrinking sub-windows (margin ``S-1-s``), and a launch advances
+    ``fuse_steps`` steps, so the total divides by the depth.
+
+    ``groups_per_axis`` defaults to one matmul group per axis (a star
+    stencil like fused diffusion).
+    """
+    if fuse_steps < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
+    rank = len(tuple(block))
+    groups = (
+        (1,) * rank
+        if groups_per_axis is None
+        else tuple(groups_per_axis)
+    )
+    n_blocks = 1
+    for n, t in zip(domain, block):
+        n_blocks *= _ceil_div(n, t)
+    total = 0.0
+    for s in range(fuse_steps):
+        margin = fuse_steps - 1 - s
+        sub = [
+            t + 2 * r * margin for t, r in zip(block, radii)
+        ]
+        vol = 1
+        for x in sub:
+            vol *= x
+        per_point = sum(
+            2.0 * g * (sub[a] + 2 * radii[a])
+            for a, g in enumerate(groups)
+        )
+        total += vol * per_point
+    return n_blocks * n_f * total / fuse_steps
+
+
 def stencil_traffic_reduction(
     domain: Sequence[int],
     radii: Sequence[int],

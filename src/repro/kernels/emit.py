@@ -31,6 +31,19 @@ Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
   ``2·r·fuse_steps`` planes and each chunk runs the temporal sweeps on
   the streaming working set — the streaming variant of temporal
   blocking.
+* ``tc`` — the matrix-unit regime: staging and grid are identical to
+  pipelined ``swc``, but tap evaluation is lowered by
+  :func:`_block_derivs_tc` instead of shifted-slice FMAs. Each
+  multi-tap contraction group (see
+  :func:`~repro.kernels.plan.tc_axis_groups`) becomes one
+  ``jax.lax.dot_general`` of the staged window against a banded
+  coefficient matrix of shape (τ_a+2r_a, τ_a) — with
+  ``preferred_element_type=jnp.float32``, the form Mosaic places on
+  the MXU with f32 accumulation (bf16 inputs run at double rate).
+  Lone taps stay scalar slice-multiplies (a matmul per single tap
+  would be all overhead). Temporal fusion reuses
+  :func:`_temporal_sweeps` with the matmul derivs; the batch axis
+  composes for free (members are extra rows of the contraction).
 
 The HWC ("let the compiler manage residency") strategy lives in
 ``repro.kernels.ref`` as pure jnp.
@@ -48,7 +61,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.stencil import OperatorSet
 from repro.kernels.compat import element_window_spec
-from repro.kernels.plan import StencilPlan
+from repro.kernels.plan import StencilPlan, tc_axis_groups
 
 
 def _block_derivs(
@@ -76,18 +89,112 @@ def _block_derivs(
     return out
 
 
+def _tc_band(
+    taps: tuple[tuple[int, float], ...],
+    out_extent: int,
+    radius: int,
+    dtype,
+) -> jnp.ndarray:
+    """Banded coefficient matrix for one tc contraction group.
+
+    ``B[radius + j + i, i] = c`` for each tap ``(j, c)`` and output
+    index ``i``: column ``i`` gathers the group's taps around the
+    window position ``radius + i`` (output point ``i``'s center), so
+    ``window @ B`` evaluates the whole 1-D contraction in one matmul.
+    Shape (out_extent + 2·radius, out_extent). Built from 2-D iotas at
+    trace time INSIDE the kernel — Pallas rejects large captured array
+    constants, and the few compare/selects are noise next to the
+    contraction itself. Temporal sweeps need one band per shrinking
+    sub-tile extent.
+    """
+    shape = (out_extent + 2 * radius, out_extent)
+    diag = jax.lax.broadcasted_iota(
+        jnp.int32, shape, 0
+    ) - jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    band = jnp.zeros(shape, jnp.float32)
+    for j, c in taps:
+        band = band + jnp.where(
+            diag == radius + j, jnp.float32(c), jnp.float32(0)
+        )
+    return band.astype(dtype)
+
+
+def _block_derivs_tc(
+    fblk: jnp.ndarray,
+    ops: OperatorSet,
+    radii: tuple[int, ...],
+    tile: tuple[int, ...],
+) -> dict[str, jnp.ndarray]:
+    """MXU variant of :func:`_block_derivs`: same (n_f, *(τ_a + 2r_a))
+    window, same results, but every multi-tap contraction group runs as
+    a banded-matrix ``dot_general`` with f32 accumulation.
+
+    The band is materialized in the input dtype (so bf16 coefficients
+    round exactly as the VPU path's), the contraction accumulates in
+    float32 (``preferred_element_type``), and the operator result is
+    cast back to the block dtype at the end — the
+    "bf16-input-f32-accumulate" MXU contract.
+    """
+    rank = len(tile)
+    out: dict[str, jnp.ndarray] = {}
+    for spec in ops.ops:
+        acc = None
+        for (axis, rest), taps in sorted(
+            tc_axis_groups(spec, rank).items()
+        ):
+            if len(taps) == 1:
+                ((j, c),) = taps
+                off = tuple(
+                    j if a == axis else rest[a] for a in range(rank)
+                )
+                sl = (slice(None),) + tuple(
+                    slice(radii[a] + off[a], radii[a] + off[a] + tile[a])
+                    for a in range(rank)
+                )
+                term = (
+                    jnp.asarray(c, dtype=fblk.dtype) * fblk[sl]
+                ).astype(jnp.float32)
+            else:
+                sl = (slice(None),) + tuple(
+                    slice(0, tile[a] + 2 * radii[a]) if a == axis
+                    else slice(
+                        radii[a] + rest[a],
+                        radii[a] + rest[a] + tile[a],
+                    )
+                    for a in range(rank)
+                )
+                band = _tc_band(
+                    tuple(sorted(taps)), tile[axis], radii[axis],
+                    fblk.dtype,
+                )
+                term = jax.lax.dot_general(
+                    fblk[sl],
+                    band,
+                    dimension_numbers=(((1 + axis,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                # dot_general appends the band's output dim last; put it
+                # back where the contracted axis was.
+                term = jnp.moveaxis(term, -1, 1 + axis)
+            acc = term if acc is None else acc + term
+        out[spec.name] = acc.astype(fblk.dtype)
+    return out
+
+
 def _kernel_pipelined(
-    f_ref, *rest, ops, radii, tile, phi, unroll, has_aux
+    f_ref, *rest, ops, radii, tile, phi, unroll, has_aux,
+    derivs_fn=_block_derivs,
 ):
     """Pipelined kernel, any rank. ``rest`` is (aux_ref, o_ref) when the
-    plan carries aux inputs, else (o_ref,)."""
+    plan carries aux inputs, else (o_ref,). ``derivs_fn`` selects the
+    tap-evaluation lowering (VPU shifted slices or MXU contractions)."""
     aux_ref, o_ref = rest if has_aux else (None, rest[0])
     fblk = f_ref[...]
     tx = tile[-1]
     rx = radii[-1]
     for e in range(unroll):  # static: unrolled at trace time
         sub = fblk if unroll == 1 else fblk[..., e * tx : e * tx + tx + 2 * rx]
-        derivs = _block_derivs(sub, ops, radii, tile)
+        derivs = derivs_fn(sub, ops, radii, tile)
         if has_aux:
             ablk = aux_ref[...]
             a_sub = ablk if unroll == 1 else ablk[..., e * tx : (e + 1) * tx]
@@ -100,12 +207,22 @@ def _kernel_pipelined(
             o_ref[..., e * tx : (e + 1) * tx] = val
 
 
+def _kernel_tc(f_ref, *rest, ops, radii, tile, phi, has_aux):
+    """Depth-1 MXU kernel: the pipelined body with banded-contraction
+    tap evaluation (named so tc launches are identifiable in traces)."""
+    _kernel_pipelined(
+        f_ref, *rest, ops=ops, radii=radii, tile=tile, phi=phi,
+        unroll=1, has_aux=has_aux, derivs_fn=_block_derivs_tc,
+    )
+
+
 def _temporal_sweeps(
     cur: jnp.ndarray,
     ops: OperatorSet,
     radii: tuple[int, ...],
     tile: tuple[int, ...],
     phis,
+    derivs_fn=_block_derivs,
 ) -> jnp.ndarray:
     """Apply ``len(phis)`` fused sweeps to one VMEM-resident window.
 
@@ -121,7 +238,7 @@ def _temporal_sweeps(
     for s, phi in enumerate(phis):  # static: unrolled at trace time
         margin = n_steps - 1 - s
         sub_tile = tuple(t + 2 * r * margin for t, r in zip(tile, radii))
-        derivs = _block_derivs(cur, ops, radii, sub_tile)
+        derivs = derivs_fn(cur, ops, radii, sub_tile)
         val = phi(derivs)
         if margin:
             cur = val[:n_f]
@@ -129,7 +246,8 @@ def _temporal_sweeps(
 
 
 def _kernel_temporal(
-    f_ref, *rest, ops, radii, tile, phis, n_f, has_aux
+    f_ref, *rest, ops, radii, tile, phis, n_f, has_aux,
+    derivs_fn=_block_derivs,
 ):
     """Temporal-fusion kernel, any rank: apply the fused op
     ``len(phis)`` times on one VMEM-resident block staged with a
@@ -145,7 +263,9 @@ def _kernel_temporal(
     """
     if not has_aux:
         (o_ref,) = rest
-        o_ref[...] = _temporal_sweeps(f_ref[...], ops, radii, tile, phis)
+        o_ref[...] = _temporal_sweeps(
+            f_ref[...], ops, radii, tile, phis, derivs_fn=derivs_fn
+        )
         return
     aux_ref, o_ref = rest
     n_steps = len(phis)
@@ -156,7 +276,7 @@ def _kernel_temporal(
         sub_tile = tuple(
             t + 2 * r * margin for t, r in zip(tile, radii)
         )
-        derivs = _block_derivs(cur, ops, radii, sub_tile)
+        derivs = derivs_fn(cur, ops, radii, sub_tile)
         val = phi(derivs, cur_aux)
         if margin == 0:
             o_ref[...] = val
@@ -357,10 +477,17 @@ def fused_stencil_pallas(
                 )
             )
         operands.append(aux)
+    tc = plan.strategy == "tc"
     if plan.fuse_steps > 1:
         kernel = functools.partial(
             _kernel_temporal, ops=ops, radii=radii, tile=tile,
             phis=phis, n_f=plan.n_f, has_aux=aux is not None,
+            derivs_fn=_block_derivs_tc if tc else _block_derivs,
+        )
+    elif tc:
+        kernel = functools.partial(
+            _kernel_tc, ops=ops, radii=radii, tile=tile,
+            phi=phis[0], has_aux=aux is not None,
         )
     else:
         kernel = functools.partial(

@@ -1,8 +1,10 @@
 """Public wrappers for the Pallas kernels (inner bodies jit'd).
 
 These handle shape padding (block divisibility), dtype plumbing, the
-interpret-mode switch for CPU validation, strategy selection, and
-``"auto"`` block resolution through ``repro.tuning``, so callers
+interpret-mode switch for CPU validation, strategy selection (``"swc"``
+pipelined VPU, ``"swc_stream"`` explicit streaming, ``"tc"`` banded
+matrix-unit contractions, plus the compiler-managed ``"hwc"`` baseline),
+and ``"auto"`` block resolution through ``repro.tuning``, so callers
 (fusion engine, physics, models) never touch BlockSpecs.
 
 On CPU (this container) ``interpret`` defaults to True; on TPU it

@@ -25,7 +25,14 @@ from typing import Sequence
 
 from repro.core.stencil import OperatorSet
 
-STRATEGIES = ("swc", "swc_stream")
+STRATEGIES = ("swc", "swc_stream", "tc")
+
+# The tc (matrix-unit) regime contracts each axis of the φ derivative
+# sequence against a banded coefficient matrix of shape
+# (tile + 2·halo, tile): its MXU work grows with the tile extent, not
+# the tap count, so tiles are capped — a (8198, 8192) rank-1 band would
+# be a quarter-gigabyte constant doing 16k FLOPs/point.
+TC_MAX_TILE = 512
 
 # Spatial-axis letters in array order (slowest→fastest, x last). The
 # stream axis of an ``swc_stream`` plan is always axis 0 — z at rank 3,
@@ -54,6 +61,48 @@ def largest_divisor_leq(n: int, cap: int) -> int:
     return 1
 
 
+def tc_axis_groups(
+    spec, rank: int
+) -> dict[tuple[int, tuple[int, ...]], list[tuple[int, float]]]:
+    """Decompose one stencil's taps into per-axis contraction groups —
+    the lowering contract of the ``tc`` (matrix-unit) regime.
+
+    Each tap is assigned a contraction axis: the LAST nonzero axis of
+    its offset (x for the center tap), so every arm of a star stencil
+    becomes one dense 1-D contraction along its own axis, and a mixed
+    partial like ∂xy falls apart into one x-contraction per y-offset.
+    The group key is ``(axis, rest)`` where ``rest`` is the offset with
+    the contraction-axis component zeroed; the value lists
+    ``(offset_along_axis, coeff)`` taps. Multi-tap groups lower to a
+    banded-matrix `dot_general` on the MXU; singleton groups stay
+    scalar slice-multiplies on the VPU (a matmul per lone tap would be
+    all overhead).
+    """
+    groups: dict[
+        tuple[int, tuple[int, ...]], list[tuple[int, float]]
+    ] = {}
+    for off, c in zip(spec.offsets, spec.coeffs):
+        nonzero = [a for a in range(rank) if off[a] != 0]
+        axis = nonzero[-1] if nonzero else rank - 1
+        rest = tuple(0 if a == axis else off[a] for a in range(rank))
+        groups.setdefault((axis, rest), []).append(
+            (int(off[axis]), float(c))
+        )
+    return groups
+
+
+def tc_groups_per_axis(ops: OperatorSet) -> tuple[int, ...]:
+    """Number of multi-tap (i.e. matmul-lowered) contraction groups per
+    axis across an operator set — the ``tc`` compute model's input (its
+    MXU FLOPs scale with groups × tile extent, not tap count)."""
+    counts = [0] * ops.ndim
+    for spec in ops.ops:
+        for (axis, _), taps in tc_axis_groups(spec, ops.ndim).items():
+            if len(taps) > 1:
+                counts[axis] += 1
+    return tuple(counts)
+
+
 def strategy_sid(
     strategy: str,
     rank: int,
@@ -75,6 +124,11 @@ def strategy_sid(
     appends ``:b{B}`` — a block tuned for a B-member ensemble launch is
     never replayed for a single-member one (the VMEM working set and
     amortized traffic both change with B).
+
+    ``"tc"`` (the matrix-unit regime) needs no extra marker of its own:
+    the bare strategy name distinguishes it, and the generic suffixes
+    compose — a fused batched MXU plan keys as ``tc:f{S}:b{B}``, which
+    can never collide with any ``swc``-family id.
     """
     sid = strategy
     if strategy == "swc_stream":
@@ -115,6 +169,13 @@ class StencilPlan:
     tiling it in the Pallas grid; it composes with ``fuse_steps`` but
     rejects aux inputs and element-wise unrolling.
 
+    ``strategy="tc"`` (ranks 1–3) keeps the pipelined ``swc`` staging
+    but lowers each axis of the derivative evaluation to a banded
+    coefficient-matrix contraction placed on the MXU (f32 accumulate);
+    it composes with ``fuse_steps``, ``batch`` and aux inputs, requires
+    dtype float32/bfloat16 and ``unroll=1``, and caps tiles at
+    ``TC_MAX_TILE`` per axis (see :func:`tc_axis_groups`).
+
     Raises:
         ValueError: from ``__post_init__`` for any inconsistent
             combination — unknown strategy, rank/strategy mismatch,
@@ -133,7 +194,7 @@ class StencilPlan:
     """
 
     rank: int
-    strategy: str  # "swc" | "swc_stream"
+    strategy: str  # "swc" | "swc_stream" | "tc"
     block: tuple[int, ...]  # rank-length tile, x last
     radii: tuple[int, ...]  # halo width per axis
     interior: tuple[int, ...]  # unpadded spatial extents
@@ -167,6 +228,22 @@ class StencilPlan:
             )
         if self.strategy == "swc_stream" and self.n_aux:
             raise ValueError("aux inputs: use strategy='swc'")
+        if self.strategy == "tc" and self.dtype not in (
+            "float32", "bfloat16",
+        ):
+            raise ValueError(
+                "strategy='tc' lowers the φ derivative sequence to MXU "
+                "matmuls with float32 accumulation — dtype must be "
+                "'float32' or 'bfloat16' (bf16 inputs, f32 accumulate); "
+                f"got {self.dtype!r}. For float64 fields use "
+                "strategy='swc' (VPU) or 'hwc'."
+            )
+        if self.strategy == "tc" and self.unroll != 1:
+            raise ValueError(
+                "tc lowers each axis to one banded contraction per "
+                "block — element-wise unrolling does not compose; use "
+                "unroll=1 with strategy='tc'"
+            )
         for name, t in (
             ("block", self.block),
             ("radii", self.radii),
@@ -368,6 +445,11 @@ def plan_stencil(
     block = tuple(int(b) for b in block)
     if len(block) > rank:
         block = block[-rank:]
+    if strategy == "tc":
+        # Every axis is a potential contraction axis: cap the tile so
+        # the banded coefficient matrices (and the per-point MXU work,
+        # which grows with the contraction extent) stay bounded.
+        block = tuple(min(b, TC_MAX_TILE) for b in block)
     if len(block) != rank:
         raise ValueError(
             f"block {block} must have {rank} entries (or more, trailing "

@@ -65,10 +65,12 @@ class DiffusionProblem:
     ) -> FusedStencilOp:
         """One forward-Euler step as a fused op. ``strategy="swc"``
         lowers through the rank-generic engine at any dimensionality
-        (1-D/2-D/3-D) and ``strategy="swc_stream"`` through the
-        explicit-streaming kernel (2-D/3-D); ``strategy="auto"`` lets
-        the cross-strategy tuning search pick the caching regime itself
-        (hwc vs swc vs swc_stream, jointly with block/depth/stream —
+        (1-D/2-D/3-D), ``strategy="swc_stream"`` through the
+        explicit-streaming kernel (2-D/3-D), and ``strategy="tc"``
+        through the MXU matmul lowering (any rank; f32/bf16 fields);
+        ``strategy="auto"`` lets the cross-strategy tuning search pick
+        the caching regime itself (hwc vs swc vs swc_stream vs tc,
+        jointly with block/depth/stream —
         ``block`` defaults to ``"auto"`` in that case). ``block`` is a
         rank-length tile, ``"auto"`` for the persistent tuning cache,
         or None for the per-rank default. ``fuse_steps`` is the

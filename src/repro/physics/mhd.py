@@ -228,8 +228,9 @@ class MHDSolver:
     """Fused-stencil MHD integrator over a periodic (n, n, n) box of
     extent 2π (paper Table B2: Δs = 2π, one full period per axis).
 
-    ``strategy="auto"`` hands the caching-regime choice to the
-    cross-strategy tuning search (the ``block`` default is then ignored
+    ``strategy="auto"`` hands the caching-regime choice (hwc, swc,
+    swc_stream, or the MXU ``tc`` lowering) to the cross-strategy
+    tuning search (the ``block`` default is then ignored
     — the search owns the block). The RHS op is a shape-level self-map
     (n_out == n_f) but NOT a time-step, so depth stays pinned at 1:
     only strategy and block are searched.

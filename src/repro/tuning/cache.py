@@ -62,8 +62,15 @@ def current_backend() -> str:
 class TuningKey:
     """Everything that changes the optimal block shape."""
 
-    kernel: str  # "fused_stencil3d" | "xcorr1d" | "conv1d_depthwise" | ...
-    strategy: str  # "swc" | "swc_stream" | "baseline" | ...
+    # Kernel family: the rank-generic plan layer keys as
+    # "fused_stencil1d" / "fused_stencil2d" / "fused_stencil3d"
+    # (StencilPlan.kernel_name); the standalone 1-D kernels as
+    # "xcorr1d" and "conv1d_depthwise".
+    kernel: str
+    # Strategy id from the plan layer's strategy_sid derivation — e.g.
+    # "swc", "swc_stream:sy", "tc:f2:b4", "auto:sauto:fauto" — or
+    # "baseline"/"pointwise"/"elementwise" for the 1-D kernels.
+    strategy: str
     domain: tuple[int, ...]  # interior extents
     radii: tuple[int, ...]  # stencil radii (halo widths) per axis
     n_f: int  # input fields
@@ -109,7 +116,7 @@ class TuningRecord:
     fuse_steps: int = 1  # winning temporal depth (1 for pure-block keys)
     stream: bool = False  # winning explicit-streaming flag (swc_stream)
     # Strategy the winning candidate lowers through ("hwc" | "swc" |
-    # "swc_stream") — load-bearing for cross-strategy "auto" keys,
+    # "swc_stream" | "tc") — load-bearing for cross-strategy "auto" keys,
     # informational for per-strategy keys (where the key pins it), and
     # empty for the 1-D kernels whose candidates carry no strategy.
     strategy_resolved: str = ""
@@ -178,8 +185,9 @@ def candidate_label(
 ) -> str:
     """Timing-table label for one tuning candidate/record: the block,
     suffixed with the temporal depth when a joint search mixes depths
-    and the stream marker when it mixes strategies (a pipelined and a
-    streamed candidate may share a block); ``hwc`` for the compiler-
+    and a strategy marker when it mixes strategies (a pipelined, a
+    streamed and a matrix-unit candidate may share a block): ``:s`` for
+    streaming, ``:tc`` for the MXU regime; ``hwc`` for the compiler-
     managed baseline, which has no meaningful block."""
     if strategy == "hwc":
         return "hwc"
@@ -188,6 +196,8 @@ def candidate_label(
         label += f"@f{fuse_steps}"
     if stream:
         label += ":s"
+    if strategy == "tc":
+        label += ":tc"
     return label
 
 

@@ -28,11 +28,15 @@ import jax
 import numpy as np
 
 from repro.core.trafficmodel import (
+    peak_hbm_bw,
+    peak_mxu_flops,
     stencil_batched_hbm_bytes_per_member_step,
     stencil_hbm_bytes_per_step,
+    stencil_mxu_flops_per_step,
     stencil_redundant_compute_fraction,
     stencil_stream_hbm_bytes_per_step,
 )
+from repro.kernels.plan import TC_MAX_TILE
 
 # Conservative per-core VMEM budget (bytes). v4/v5 expose ~16 MiB per
 # core to Pallas; we leave headroom for the output block + spills.
@@ -53,8 +57,9 @@ class Candidate:
     # and VMEM terms use the streaming model.
     stream: bool = False
     # Caching regime this candidate lowers through ("hwc" | "swc" |
-    # "swc_stream") — the cross-strategy "auto" search mixes all three
-    # in one ranked space, and the tuning record persists the winner.
+    # "swc_stream" | "tc") — the cross-strategy "auto" search mixes
+    # them in one ranked space, and the tuning record persists the
+    # winner.
     strategy: str = "swc"
 
 
@@ -150,6 +155,9 @@ def enumerate_candidates_nd(
     axis_options: Sequence[Sequence[int]] | None = None,
     fuse_steps_options: Sequence[int] = (1,),
     stream_options: Sequence[bool] = (False,),
+    tc_options: Sequence[bool] = (False,),
+    tc_groups: Sequence[int] | None = None,
+    backend: str | None = None,
     batch: int = 1,
 ) -> list[Candidate]:
     """Generate, filter (divisibility + VMEM + the tiny-block guard),
@@ -180,6 +188,20 @@ def enumerate_candidates_nd(
     batched model, which amortizes the fixed per-launch overhead over
     B·fuse_steps — different B therefore rank (and admit) different
     blocks/depths, which is why ``batch`` joins the tuning key.
+
+    ``tc_options`` adds matrix-unit (``tc``) candidates: same staging
+    and traffic model as pipelined ``swc``, but scored on
+    ``max(traffic_time, mxu_time)`` — a genuine two-resource roofline
+    instead of the scalar :data:`TEMPORAL_COMPUTE_WEIGHT` hack, because
+    the MXU work of a banded contraction grows with the tile extent and
+    really can dominate. The MXU term normalizes the modeled FLOPs
+    (``stencil_mxu_flops_per_step`` with ``tc_groups`` matmul groups
+    per axis, peak rates looked up for ``backend``) against the same
+    ideal-traffic denominator the traffic score uses, so the two sides
+    of the ``max`` are in the same unit. tc candidates are skipped for
+    8-byte dtypes (no f64 MXU path) and for tiles beyond
+    ``TC_MAX_TILE`` on any axis (the contraction extent — and with it
+    the per-point FLOPs — grows with the tile).
     """
     domain = tuple(domain)
     rank = len(domain)
@@ -190,9 +212,19 @@ def enumerate_candidates_nd(
         points *= n
     ideal_bytes = (n_f + n_out) * points * itemsize  # compulsory traffic
     out: list[Candidate] = []
+    regimes: list[str] = []
     for stream in stream_options:
         if stream and rank < 2:
             continue  # streaming needs a cross-stream tile axis
+        regimes.append("swc_stream" if stream else "swc")
+    for tc in tc_options:
+        # No MXU path for 8-byte dtypes (f32/bf16-input-f32-accumulate
+        # only — mirrors StencilPlan validation).
+        if tc and itemsize in (2, 4) and "tc" not in regimes:
+            regimes.append("tc")
+    for regime in regimes:
+        stream = regime == "swc_stream"
+        tc = regime == "tc"
         for fuse in fuse_steps_options:
             for raw in itertools.product(*axis_options):
                 blk = []
@@ -205,6 +237,8 @@ def enumerate_candidates_nd(
                 if not ok:
                     continue
                 blk = tuple(blk)
+                if tc and any(t > TC_MAX_TILE for t in blk):
+                    continue  # contraction extent (→ FLOPs) unbounded
                 if stream and fuse > 1 and (
                     domain[0] < 2 * radii[0] * fuse + blk[0]
                 ):
@@ -245,14 +279,30 @@ def enumerate_candidates_nd(
                     else 0.0
                 )
                 step_pen = LANE / blk[-1] if rank == 1 else 0.0
-                score = (
-                    traffic * (1.0 + align_pen + bubble_pen + step_pen)
-                    + TEMPORAL_COMPUTE_WEIGHT * redundancy
-                )
+                pens = 1.0 + align_pen + bubble_pen + step_pen
+                if tc:
+                    # Two-resource roofline: the launch takes the
+                    # slower of its HBM walk and its MXU contractions.
+                    # Halo recompute is already inside the FLOPs term
+                    # (sub-windows include the shrinking margins), so
+                    # no separate redundancy weight.
+                    mxu = (
+                        stencil_mxu_flops_per_step(
+                            domain, blk, radii, n_f, fuse,
+                            groups_per_axis=tc_groups,
+                        )
+                        / peak_mxu_flops(backend, itemsize)
+                    ) / (ideal_bytes / peak_hbm_bw(backend))
+                    score = max(traffic, mxu) * pens
+                else:
+                    score = (
+                        traffic * pens
+                        + TEMPORAL_COMPUTE_WEIGHT * redundancy
+                    )
                 out.append(
                     Candidate(
                         blk, vm, ho, score, fuse, stream,
-                        strategy="swc_stream" if stream else "swc",
+                        strategy=regime,
                     )
                 )
     # Tie-break equal modeled scores on the smaller VMEM working set
@@ -300,12 +350,17 @@ def enumerate_cross_strategy_nd(
     vmem_budget: int = VMEM_BUDGET,
     fuse_steps_options: Sequence[int] = (1,),
     stream_ok: bool = True,
+    tc_ok: bool = True,
+    tc_groups: Sequence[int] | None = None,
+    backend: str | None = None,
     batch: int = 1,
 ) -> list[Candidate]:
-    """The ``strategy="auto"`` candidate space: every ``swc`` and (rank
-    ≥ 2, ``stream_ok``) ``swc_stream`` configuration the joint
-    ``(block, fuse_steps, stream)`` enumeration admits, plus the ``hwc``
-    baseline as the modeled-traffic floor, ranked in ONE ordered list.
+    """The ``strategy="auto"`` candidate space: every ``swc``, (rank
+    ≥ 2, ``stream_ok``) ``swc_stream`` and (f32/bf16, ``tc_ok``) ``tc``
+    configuration the joint ``(strategy, block, fuse_steps, stream)``
+    enumeration admits, plus the ``hwc`` baseline as the modeled-
+    traffic floor, ranked in ONE ordered list — the space in which
+    ``strategy="auto"`` discovers the VPU/MXU crossover.
 
     The hwc entry is always present, so the cross-strategy search can
     never come back empty or VMEM-degenerate — a domain too small to
@@ -317,6 +372,8 @@ def enumerate_cross_strategy_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=fuse_steps_options,
         stream_options=(False, True) if stream_ok else (False,),
+        tc_options=(False, True) if tc_ok else (False,),
+        tc_groups=tc_groups, backend=backend,
         batch=batch,
     )
     out = [hwc_candidate(domain, min(fuse_steps_options))] + cands

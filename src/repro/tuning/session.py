@@ -268,28 +268,36 @@ def fused_nd_candidates(
     vmem_budget: int = VMEM_BUDGET,
     fuse_steps_options: Sequence[int] = (1,),
     stream: bool = False,
+    tc: bool = False,
+    tc_groups: Sequence[int] | None = None,
     batch: int = 1,
 ) -> list[Candidate]:
     """Structurally-ranked (block, fuse_steps) configurations for a
     rank-1/2/3 domain (``stream=True`` scores every candidate with the
     explicit-streaming traffic/VMEM model — the ``swc_stream`` search
-    space; ``batch > 1`` with the batched per-member VMEM/traffic
+    space; ``tc=True`` enumerates only matrix-unit candidates scored on
+    ``max(traffic, mxu)`` with ``tc_groups`` contraction groups per
+    axis; ``batch > 1`` with the batched per-member VMEM/traffic
     model), with graceful degradation: if nothing fits the VMEM budget,
     re-enumerate without the filter and keep only the smallest-footprint
     shape so ``auto`` still resolves (marked ``fallback`` by the
     caller)."""
-    stream_options = (stream,)
+    stream_options = () if tc else (stream,)
+    tc_options = (tc,)
+    backend = current_backend()
     cands = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=fuse_steps_options,
-        stream_options=stream_options, batch=batch,
+        stream_options=stream_options, tc_options=tc_options,
+        tc_groups=tc_groups, backend=backend, batch=batch,
     )
     if cands:
         return cands
     unfiltered = enumerate_candidates_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=2**63,
         fuse_steps_options=fuse_steps_options,
-        stream_options=stream_options, batch=batch,
+        stream_options=stream_options, tc_options=tc_options,
+        tc_groups=tc_groups, backend=backend, batch=batch,
     )
     if not unfiltered:
         return []
@@ -352,7 +360,11 @@ def auto_block_nd(
     planner degrades to 1 is keyed as 1. A batched
     (batch, n_f, *padded) ensemble operand keys as ``:b{B}`` and ranks
     candidates with the batched VMEM/per-member traffic model."""
-    from repro.kernels.plan import DEFAULT_BLOCKS, plan_stencil
+    from repro.kernels.plan import (
+        DEFAULT_BLOCKS,
+        plan_stencil,
+        tc_groups_per_axis,
+    )
 
     sess = session if session is not None else default_session()
     batched = f_padded.ndim == ops.ndim + 2
@@ -372,6 +384,8 @@ def auto_block_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=(fuse_steps,),
         stream=probe.strategy == "swc_stream",
+        tc=probe.strategy == "tc",
+        tc_groups=tc_groups_per_axis(ops),
         batch=probe.batch,
     )
     if not cands:  # degenerate domain: let the planner clamp a default
@@ -465,10 +479,15 @@ def auto_fuse_nd(
         domain, radii, n_f, n_out, str(f_interior.dtype), strategy,
         fuse_steps="auto", batch=batch,
     )
+    from repro.kernels.plan import tc_groups_per_axis
+
     cands = fused_nd_candidates(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=tuple(depth_options),
-        stream=strategy == "swc_stream", batch=batch,
+        stream=strategy == "swc_stream",
+        tc=strategy == "tc",
+        tc_groups=tc_groups_per_axis(ops),
+        batch=batch,
     )
     if not cands:
         from repro.kernels.plan import DEFAULT_BLOCKS
@@ -611,12 +630,14 @@ def auto_strategy_nd(
     field stack (n_f, *spatial) — the paper's "no single caching regime
     wins everywhere" finding closed into one tuning loop.
 
-    The candidate space is every ``swc`` and ``swc_stream``
+    The candidate space is every ``swc``, ``swc_stream`` and ``tc``
     configuration the joint enumeration admits plus the ``hwc``
     baseline at the modeled-traffic floor
     (:func:`repro.tuning.costmodel.enumerate_cross_strategy_nd`);
     streaming candidates are enumerated only at rank ≥ 2 with no aux
-    operand (the streaming kernel rejects carries). Eager call sites
+    operand (the streaming kernel rejects carries), and matrix-unit
+    (``tc``) candidates only for f32/bf16 operands — mirroring plan
+    validation, so a structurally-winning regime is always lowerable. Eager call sites
     measure the top-k — the hwc candidate as the jitted XLA reference,
     the Pallas candidates padded per depth — and persist the winner
     under ONE ``auto:sauto`` key whose schema-v2 record carries the
@@ -666,10 +687,15 @@ def auto_strategy_nd(
         batch=batch,
     )
 
+    from repro.kernels.plan import tc_groups_per_axis
+
     cands = enumerate_cross_strategy_nd(
         domain, radii, n_f, n_out, itemsize, vmem_budget=vmem_budget,
         fuse_steps_options=tuple(depth_options),
         stream_ok=len(domain) >= 2 and n_aux == 0,
+        tc_ok=str(f_interior.dtype) in ("float32", "bfloat16"),
+        tc_groups=tc_groups_per_axis(ops),
+        backend=current_backend(),
         batch=batch,
     )
     measure = None

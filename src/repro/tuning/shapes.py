@@ -64,6 +64,26 @@ def _warm_diffusion_stream(full: bool) -> None:
         p.step_op("swc_stream", block="auto", fuse_steps=2)(f0)
 
 
+def _warm_diffusion_tc(full: bool) -> None:
+    """MXU (``tc``) plans at rank 2 and 3, plus one 4-member batched
+    ensemble shape — the ``tc`` marker and the ``:b{B}`` batch extent
+    are both part of the cache key (``tc:b4`` never replays a ``swc``
+    winner), so each needs its own warmed record."""
+    from repro.physics.diffusion import DiffusionProblem
+
+    shapes = [
+        ((2048, 2048) if full else (64, 128)),
+        ((128, 128, 128) if full else (16, 16, 64)),
+    ]
+    for shape in shapes:
+        p = DiffusionProblem(shape, accuracy=6)
+        f0 = p.init_field()
+        p.step_op("tc", block="auto")(f0)
+    p2 = DiffusionProblem(shapes[0], accuracy=6)
+    stack = jnp.stack([p2.init_field(seed=s) for s in range(4)])
+    p2.step_op("tc", block="auto")(stack)
+
+
 def _warm_diffusion_auto(full: bool) -> None:
     """Cross-strategy ``strategy="auto"`` records (one ``auto:sauto``
     key per shape holding the resolved strategy/block/depth/stream), so
@@ -151,6 +171,7 @@ REGISTRY: tuple[WarmEntry, ...] = (
     WarmEntry("fig11/diffusion3d_swc", _warm_diffusion3d),
     WarmEntry("fig11/diffusion1d2d_swc", _warm_diffusion_lowdim),
     WarmEntry("fig11/diffusion_swc_stream", _warm_diffusion_stream),
+    WarmEntry("fig11/diffusion_tc", _warm_diffusion_tc),
     WarmEntry("fig11/diffusion_auto", _warm_diffusion_auto),
     WarmEntry("fig13-14/mhd_swc", _warm_mhd),
     WarmEntry("fig13/mhd_swc_stream", _warm_mhd_stream),

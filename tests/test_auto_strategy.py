@@ -63,7 +63,9 @@ def test_auto_resolves_concrete_and_matches_reference(
     op = p.step_op("auto", fuse_steps="auto")
     assert op.block == "auto"  # coerced from None: auto owns the block
     rop = op.resolved(f0)
-    assert rop.strategy in ("hwc", "swc", "swc_stream")
+    assert rop.strategy in ("hwc", "swc", "swc_stream", "tc")
+    if dtype == jnp.float64:
+        assert rop.strategy != "tc"  # MXU regime is f32/bf16-only
     assert isinstance(rop.block, tuple) and len(rop.block) == ndim
     assert rop.fuse_steps >= 1
     if ndim == 1:
@@ -219,7 +221,7 @@ def test_auto_under_jit_uses_structural_winner(cache_dir):
     out = jax.jit(op)(f0)
     rec = lookup_fused_nd(f0, op.ops, 1, "auto", fuse_steps="auto")
     assert rec is not None and rec.source == "model"
-    assert rec.strategy_resolved in ("hwc", "swc", "swc_stream")
+    assert rec.strategy_resolved in ("hwc", "swc", "swc_stream", "tc")
     expect = integrate(p.step_op("hwc"), f0, int(rec.fuse_steps))
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(expect), rtol=2e-5, atol=1e-7

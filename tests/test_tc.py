@@ -1,0 +1,215 @@
+"""``strategy="tc"`` — the MXU caching regime.
+
+Covers the PR acceptance criteria: parity against the sequential hwc
+reference across rank × dtype × temporal-fusion depth and through the
+ensemble batch axis, the f32/bf16 dtype gate (float64 raises), tuning-
+key uniqueness against the VPU regimes (``tc:f{S}:b{B}`` never replays
+a ``swc`` winner), the cold→warm→fresh-process record round-trip with
+``strategy_resolved="tc"`` surviving the persisted path, and the
+cross-strategy ``"auto"`` search both enumerating tc candidates and
+actually measuring them.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.fusion import integrate  # noqa: E402
+from repro.kernels.plan import tc_groups_per_axis  # noqa: E402
+from repro.physics.diffusion import DiffusionProblem  # noqa: E402
+from repro.tuning import (  # noqa: E402
+    TuningCache,
+    enumerate_cross_strategy_nd,
+    fused_nd_key,
+    lookup_fused_nd,
+)
+from repro.tuning import session as sess_mod  # noqa: E402
+from repro.tuning.session import TuningSession, auto_strategy_nd  # noqa: E402
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+SHAPES = {1: (1 << 10,), 2: (32, 64), 3: (16, 12, 16)}
+
+
+@pytest.fixture
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    return tmp_path
+
+
+# --- numerical parity (rank × dtype × depth × batch) ---------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fuse", [1, 2])
+@pytest.mark.parametrize("ndim", [1, 2, 3])
+def test_tc_matches_reference(ndim, fuse, dtype):
+    """The matmul lowering computes the same derivative sequence as the
+    tap-by-tap reference at every rank, both dtypes and through
+    temporal fusion. bf16 compares in f32 against an f32 reference at
+    bf16 resolution (the band is cast to the input dtype, so tc rounds
+    coefficients exactly like the VPU path)."""
+    p = DiffusionProblem(SHAPES[ndim], accuracy=6)
+    f32 = p.init_field(seed=1)
+    f0 = jnp.asarray(f32, dtype)
+    out = p.step_op("tc", fuse_steps=fuse)(f0)
+    assert out.dtype == dtype  # f32 accumulation casts back on store
+    expect = integrate(p.step_op("hwc"), f32, fuse)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect), rtol=tol,
+        atol=tol,
+    )
+
+
+def test_tc_batched_matches_per_member():
+    """A (batch, n_f, *spatial) ensemble stack through tc advances each
+    member exactly as the unbatched reference does — the batch axis
+    rides along as extra contraction rows."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    stack = jnp.stack([p.init_field(seed=s) for s in range(3)])
+    out = p.step_op("tc", fuse_steps=2)(stack)
+    assert out.shape == stack.shape
+    for b in range(3):
+        expect = integrate(p.step_op("hwc"), stack[b], 2)
+        np.testing.assert_allclose(
+            np.asarray(out[b]), np.asarray(expect), rtol=2e-5, atol=1e-5
+        )
+
+
+def test_tc_rejects_float64():
+    """The MXU accumulates in f32; a float64 field must fail loudly at
+    plan validation, not silently truncate."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = jnp.asarray(p.init_field(seed=1), jnp.float64)
+    with pytest.raises(ValueError, match="float32.*bfloat16"):
+        p.step_op("tc")(f0)
+
+
+def test_tc_groups_star_stencil():
+    """Fused diffusion is a star stencil: exactly one multi-tap
+    contraction group per axis feeds the MXU compute model."""
+    for ndim, shape in SHAPES.items():
+        ops = DiffusionProblem(shape, accuracy=6).step_op("hwc").ops
+        assert tc_groups_per_axis(ops) == (1,) * ndim
+
+
+# --- tuning-key uniqueness ------------------------------------------------------
+
+
+def test_tc_key_never_collides_with_vpu_keys():
+    """``tc:f2:b4`` and friends are distinct cache identities from
+    every swc/swc_stream key of the same shape — a tc winner can never
+    be replayed by a VPU call site or vice versa."""
+    k = fused_nd_key(
+        (64, 128), (3, 3), 1, 1, "float32", "tc", fuse_steps=2, batch=4
+    )
+    assert k.strategy == "tc:f2:b4"
+    ids = {
+        fused_nd_key(
+            (64, 128), (3, 3), 1, 1, "float32", strat,
+            fuse_steps=fs, batch=b,
+        ).cache_id
+        for strat in ("swc", "swc_stream", "tc")
+        for fs in (1, 2)
+        for b in (1, 4)
+    }
+    assert len(ids) == 12  # all distinct across the full matrix
+
+
+# --- record round-trip ----------------------------------------------------------
+
+
+def test_tc_round_trips_through_cache_and_fresh_process(cache_dir):
+    """Cold measure → warm hit with zero re-measurement and bit-equal
+    output → fresh-process replay from disk. The record carries
+    ``strategy_resolved="tc"`` and every timing row the tc search wrote
+    is ``:tc``-marked."""
+    p = DiffusionProblem((32, 64), accuracy=6)
+    f0 = p.init_field(seed=3)
+    op = p.step_op("tc", block="auto", fuse_steps=2)
+    out1 = np.asarray(op(f0))  # cold: measures and persists
+    rec = lookup_fused_nd(f0, op.ops, 1, "tc", fuse_steps=2)
+    assert rec is not None and rec.source == "measured"
+    assert rec.strategy_resolved == "tc"
+    assert rec.winner_label.endswith(":tc")
+    assert all(lbl.endswith(":tc") for lbl in rec.timings_us)
+
+    before = sess_mod.MEASURE_COUNT
+    out2 = np.asarray(p.step_op("tc", block="auto", fuse_steps=2)(f0))
+    assert sess_mod.MEASURE_COUNT == before  # warm hit: no re-measure
+    np.testing.assert_array_equal(out1, out2)
+
+    code = """
+from repro.physics.diffusion import DiffusionProblem
+from repro.tuning import lookup_fused_nd
+from repro.tuning import session as sess_mod
+
+p = DiffusionProblem((32, 64), accuracy=6)
+f0 = p.init_field(seed=3)
+p.step_op("tc", block="auto", fuse_steps=2)(f0)
+assert sess_mod.MEASURE_COUNT == 0, sess_mod.MEASURE_COUNT
+op = p.step_op("tc", block="auto", fuse_steps=2)
+rec = lookup_fused_nd(f0, op.ops, 1, "tc", fuse_steps=2)
+print(f"REPLAYED {rec.strategy_resolved} {rec.block}")
+"""
+    env = dict(os.environ)
+    env["REPRO_TUNE_CACHE"] = str(cache_dir)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env,
+    )
+    assert res.returncode == 0, res.stderr
+    assert f"REPLAYED tc {rec.block}" in res.stdout
+
+
+# --- cross-strategy "auto" integration ------------------------------------------
+
+
+def test_auto_enumerates_tc_and_gates_on_itemsize():
+    """tc candidates appear in the cross-strategy space for 4-byte
+    (and would for 2-byte) fields at every rank, and never for f64."""
+    for ndim, shape in SHAPES.items():
+        cands = enumerate_cross_strategy_nd(
+            shape, (3,) * ndim, 1, 1, 4, fuse_steps_options=(1, 2)
+        )
+        assert any(c.strategy == "tc" for c in cands), ndim
+    f64 = enumerate_cross_strategy_nd(
+        (64, 128), (3, 3), 1, 1, 8, fuse_steps_options=(1, 2)
+    )
+    assert not any(c.strategy == "tc" for c in f64)
+
+
+def test_auto_measures_tc_candidates(cache_dir):
+    """With a measurement window wide enough to cover the space, the
+    eager cross-strategy search actually TIMES tc candidates (``:tc``
+    rows land in the record's timing table) — tc is a measured
+    contender, not just an enumerated one."""
+    p = DiffusionProblem((64, 128), accuracy=6)
+    f0 = p.init_field(seed=7)
+    sess = TuningSession(
+        cache=TuningCache(), top_k=64, warmup=0, iters=1,
+        record_source="smoke",
+    )
+    strat, block, depth = auto_strategy_nd(
+        f0, p.step_op("hwc").ops, p.step_op("hwc").phi, 1,
+        session=sess, depth_options=(1, 2),
+    )
+    assert strat in ("hwc", "swc", "swc_stream", "tc")
+    rec = lookup_fused_nd(
+        f0, p.step_op("hwc").ops, 1, "auto", session=sess,
+        fuse_steps="auto",
+    )
+    assert rec is not None
+    assert any(lbl.endswith(":tc") for lbl in rec.timings_us), (
+        rec.timings_us
+    )
