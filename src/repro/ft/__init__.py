@@ -1,5 +1,15 @@
 """Fault-tolerance substrate: supervised training loop with
-checkpoint/restart, failure injection, and straggler monitoring."""
+checkpoint/restart, straggler monitoring, and the seeded deterministic
+fault-injection layer the serving/tuning failure domains are tested
+against (``repro.ft.faults``)."""
+from repro.ft.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    InjectedCompileFailure,
+    InjectedFault,
+    InjectedResourceExhausted,
+    chaos_specs,
+)
 from repro.ft.supervisor import (  # noqa: F401
     SimulatedFailure,
     StragglerMonitor,

@@ -10,7 +10,9 @@ pieces here implement that contract in-process:
   REPLAYS from its step — with the deterministic data pipeline
   (data/pipeline.py) the recovery is exact.
 * ``SimulatedFailure`` + ``failure_at`` inject crashes for tests/examples
-  (the CPU stand-in for a node loss).
+  (the CPU stand-in for a node loss). ``Supervisor.recoverable`` widens
+  the checkpoint-restore trigger to real runtime errors (device loss,
+  flaky filesystem) — ``SimulatedFailure`` is only the default.
 * ``StragglerMonitor`` tracks per-step wall times; a step slower than
   ``factor ×`` the trailing median flags a straggler. On a real cluster
   the hook triggers re-layout / hot-spare swap (we log and count; the
@@ -72,6 +74,13 @@ class Supervisor:
     straggler: StragglerMonitor = dataclasses.field(
         default_factory=StragglerMonitor
     )
+    # Exception types that trigger checkpoint-restore instead of
+    # propagating. The default keeps the historical behavior (only the
+    # injected test failure); real deployments widen it, e.g.
+    # ``(SimulatedFailure, jax.errors.JaxRuntimeError, OSError)`` so a
+    # device loss or a flaky filesystem also restarts from the last
+    # durable step. KeyboardInterrupt/SystemExit are never caught.
+    recoverable: tuple[type[BaseException], ...] = (SimulatedFailure,)
 
     def run(
         self,
@@ -106,7 +115,7 @@ class Supervisor:
                 if step % self.ckpt_every == 0 or step == n_steps:
                     to_save = save_filter(state) if save_filter else state
                     self.ckpt_manager.save(step, to_save)
-            except SimulatedFailure as e:
+            except self.recoverable as e:
                 restarts += 1
                 report["restarts"] = restarts
                 report["failed_steps"].append(step)

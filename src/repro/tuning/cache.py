@@ -11,18 +11,24 @@ record (they are dropped at load). Writes are atomic (tmp + rename) and
 hold an advisory file lock around the read-merge-write, so concurrent
 processes on the same host compose instead of clobbering each other
 (on platforms without ``fcntl`` the merge still bounds the race: a lost
-record is simply re-measured later).
+record is simply re-measured later). A corrupt ``cache.json``
+(truncated or garbled by a crashed writer) is quarantined — renamed
+aside to ``cache.json.corrupt*`` with a warning — so the bad bytes
+stay inspectable while every record re-tunes from a clean file.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import json
+import logging
 import os
 import tempfile
 import time
 from pathlib import Path
 from typing import Union
+
+log = logging.getLogger("repro.tuning")
 
 try:
     import fcntl
@@ -120,6 +126,12 @@ class TuningRecord:
     # informational for per-strategy keys (where the key pins it), and
     # empty for the 1-D kernels whose candidates carry no strategy.
     strategy_resolved: str = ""
+    # Failed rows of the timing table: candidate label → error summary
+    # for every candidate whose measurement raised (injected compile
+    # failure, RESOURCE_EXHAUSTED, non-finite output). Re-tunes skip
+    # these known-bad candidates instead of re-launching them; the
+    # field is additive, so pre-existing records parse with no failures.
+    failed: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         blk = list(self.block) if isinstance(self.block, tuple) else self.block
@@ -132,6 +144,7 @@ class TuningRecord:
             "fuse_steps": self.fuse_steps,
             "stream": self.stream,
             "strategy_resolved": self.strategy_resolved,
+            "failed": self.failed,
         }
 
     @classmethod
@@ -148,6 +161,7 @@ class TuningRecord:
             fuse_steps=int(d.get("fuse_steps", 1)),
             stream=bool(d.get("stream", False)),
             strategy_resolved=str(d.get("strategy_resolved", "")),
+            failed=dict(d.get("failed", {})),
         )
 
     @property
@@ -213,12 +227,20 @@ class TuningCache:
 
     def _read_disk(self) -> dict[str, TuningRecord]:
         try:
-            raw = json.loads(self.file.read_text())
-        except (OSError, ValueError):
+            text = self.file.read_text()
+        except OSError:
+            return {}  # no cache yet: cold start, not corruption
+        try:
+            raw = json.loads(text)
+        except ValueError:
+            self._quarantine_corrupt("unparseable JSON")
             return {}
         records = raw.get("records") if isinstance(raw, dict) else None
         if not isinstance(records, dict):
-            return {}  # corrupted/foreign content degrades to a re-tune
+            # Parseable JSON but not our layout (foreign or truncated-
+            # then-valid content): same quarantine, same re-tune.
+            self._quarantine_corrupt("not a tuning-cache document")
+            return {}
         out: dict[str, TuningRecord] = {}
         for key, rec in records.items():
             try:
@@ -229,6 +251,33 @@ class TuningCache:
                 continue  # schema bump invalidates old records
             out[key] = parsed
         return out
+
+    def _quarantine_corrupt(self, reason: str) -> None:
+        """Move a corrupt ``cache.json`` aside (``cache.json.corrupt``,
+        numbered if that exists) instead of silently shadowing it with
+        an empty view: the bad bytes stay inspectable, the next write
+        starts from a clean file, and every record is re-tuned rather
+        than half-trusted. Losing the rename race to a concurrent
+        process is fine — someone quarantined it."""
+        for n in range(100):
+            suffix = ".corrupt" if n == 0 else f".corrupt.{n}"
+            target = self.file.with_name(self.file.name + suffix)
+            if target.exists():
+                continue
+            try:
+                os.replace(self.file, target)
+            except OSError:
+                return  # already quarantined (or unlinked) by a peer
+            log.warning(
+                "quarantined corrupt tuning cache %s -> %s (%s); "
+                "records will be re-tuned", self.file, target.name, reason,
+            )
+            return
+        # 100 corpses: stop hoarding, drop the bytes.
+        try:
+            os.unlink(self.file)
+        except OSError:
+            pass
 
     def _write_disk(self, records: dict[str, TuningRecord]) -> None:
         self.dir.mkdir(parents=True, exist_ok=True)

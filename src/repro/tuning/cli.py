@@ -69,6 +69,8 @@ def _show_records(records) -> None:
         for blk, us in sorted(rec.timings_us.items(), key=lambda kv: kv[1]):
             mark = " <-- winner" if blk == winner else ""
             print(f"    {blk:>16s}  {us:12.1f} us{mark}")
+        for blk, err in sorted(rec.failed.items()):
+            print(f"    {blk:>16s}  FAILED: {err}")
 
 
 def cmd_show(args: argparse.Namespace) -> int:

@@ -515,17 +515,49 @@ def time_candidate(
     *,
     warmup: int = 2,
     iters: int = 5,
+    validate: bool = True,
 ) -> float:
     """Median wall-clock seconds (paper: warm-up then median of timed
-    iterations, block_until_ready for proper synchronization)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
+    iterations, block_until_ready for proper synchronization).
+
+    ``validate`` checks the first warm-up output for NaN/inf and raises
+    ``ValueError`` on corruption — a mis-lowered candidate that blows
+    up numerically must be discarded as a failed launch (and recorded
+    as a ``failed`` row by the session), not timed into a cache winner.
+    """
+    for i in range(warmup):
+        out = jax.block_until_ready(fn())
+        if validate and i == 0:
+            _check_finite(out)
     ts = []
-    for _ in range(iters):
+    for i in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn())
+        out = jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
+        if validate and warmup == 0 and i == 0:
+            _check_finite(out)
     return float(np.median(ts))
+
+
+def _check_finite(out) -> None:
+    """Raise ``ValueError`` if any floating leaf of ``out`` contains
+    NaN/inf (the candidate-output validation gate of
+    :func:`time_candidate`)."""
+    for leaf in jax.tree_util.tree_leaves(out):
+        arr = np.asarray(leaf)
+        # bfloat16 (ml_dtypes) reports numpy kind "V", not "f" — catch
+        # it by name so low-precision candidates are validated too.
+        if arr.dtype.kind not in "fc" and "float" not in arr.dtype.name:
+            continue
+        try:
+            finite = bool(np.isfinite(arr).all())
+        except TypeError:  # exotic float dtypes (e.g. bfloat16)
+            finite = bool(np.isfinite(arr.astype(np.float32)).all())
+        if not finite:
+            raise ValueError(
+                "candidate produced non-finite output "
+                f"(shape {arr.shape}, dtype {arr.dtype})"
+            )
 
 
 def autotune(

@@ -14,10 +14,12 @@ winner and records it as ``source="model"``; a later eager call or
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable, Sequence
 
 import jax
 
+from repro.ft import faults as ftfaults
 from repro.tuning.cache import (
     TuningCache,
     TuningKey,
@@ -33,6 +35,8 @@ from repro.tuning.costmodel import (
     enumerate_cross_strategy_nd,
     time_candidate,
 )
+
+log = logging.getLogger("repro.tuning")
 
 # Total hardware measurements taken by sessions in this process. Tests
 # (and the acceptance criterion) assert a second process replays from the
@@ -103,8 +107,11 @@ class TuningSession:
         expose a ``.block`` attribute (and optionally ``.fuse_steps``
         for joint block/temporal-depth searches).
         ``measure(candidate) -> seconds`` may raise to signal a
-        discarded launch; ``None`` (e.g. under tracing) selects the
-        structural winner without hardware.
+        discarded launch — the failure is recorded as a ``failed`` row
+        of the persisted timing table (label → error summary), and
+        later re-tunes of the same key skip those known-bad candidates
+        instead of re-launching them; ``None`` (e.g. under tracing)
+        selects the structural winner without hardware.
         """
         if not force:
             hit = self.cache.get(key)
@@ -118,26 +125,55 @@ class TuningSession:
         if not candidates:
             raise ValueError(f"no tuning candidates for {key.cache_id}")
 
+        # Known-bad candidates from a prior record's failed rows are
+        # carried forward and never re-launched (a compile failure or
+        # RESOURCE_EXHAUSTED is not going to heal between processes).
+        prior = self.cache.get(key)
+        known_bad = dict(prior.failed) if prior is not None else {}
+        failed: dict[str, str] = {
+            label: err
+            for label, err in known_bad.items()
+            if any(_timing_label(c) == label for c in candidates)
+        }
+        pool = [
+            c for c in candidates if _timing_label(c) not in known_bad
+        ]
+
         record: TuningRecord | None = None
         if measure is not None:
             global MEASURE_COUNT
             timings: dict[str, float] = {}
             best: tuple[float, Any] | None = None
-            for cand in list(candidates)[: self.top_k]:
+            for cand in pool[: self.top_k]:
+                label = _timing_label(cand)
                 try:
+                    ftfaults.maybe_fail_candidate(label)
                     t = measure(cand)
-                except Exception:
-                    continue  # the paper's discarded launch (not counted)
+                except Exception as e:
+                    # The paper's discarded launch (not counted as a
+                    # measurement) — but persisted, so warm re-tunes
+                    # skip the candidate instead of rediscovering it.
+                    failed[label] = f"{type(e).__name__}: {e}"
+                    log.warning(
+                        "tuning candidate %s failed for %s: %s",
+                        label, key.cache_id, failed[label],
+                    )
+                    continue
                 MEASURE_COUNT += 1
-                timings[_timing_label(cand)] = t * 1e6
+                timings[label] = t * 1e6
                 if best is None or t < best[0]:
                     best = (t, cand)
             if best is not None:
                 record = _candidate_record(
                     best[1], timings, self.record_source
                 )
-        if record is None:  # no measure fn, or every candidate discarded
-            record = _candidate_record(candidates[0], {}, "model")
+        if record is None:
+            # No measure fn, or every attempted candidate was discarded:
+            # fall back to the structural winner among the not-known-bad
+            # pool (source="model" keeps the record upgradeable).
+            fallback = pool[0] if pool else candidates[0]
+            record = _candidate_record(fallback, {}, "model")
+        record.failed = failed
         self.cache.put(key, record)
         return record
 

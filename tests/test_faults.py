@@ -1,0 +1,300 @@
+"""Fault-injection and failure-domain tests (ISSUE 8).
+
+Covers the injector itself (spec validation, firing budgets,
+conjunctive selectors, seeded chaos-plan determinism), every rung of
+the serving recovery ladder (retry with backoff → strategy degradation
+→ batch bisection → quarantine), NaN/inf output validation, and the
+widened ``Supervisor.recoverable`` exception tuple.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft.faults import (
+    FaultInjector,
+    FaultSpec,
+    InjectedCompileFailure,
+    InjectedResourceExhausted,
+    chaos_specs,
+)
+from repro.ft.supervisor import SimulatedFailure, Supervisor
+from repro.launch.serve_sim import (
+    RequestQueue,
+    RetryPolicy,
+    SimRequest,
+    SimServer,
+)
+
+
+def _req(rid, shape=(8, 16), n_steps=2):
+    f0 = jnp.zeros((1,) + shape, jnp.float32) + 1e-5 * (rid + 1)
+    return SimRequest(rid, f0, n_steps)
+
+
+def _server(**kw):
+    kw.setdefault("strategy", "swc")
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("retry", RetryPolicy(max_retries=2, backoff_s=0.0))
+    return SimServer(**kw)
+
+
+# --- the injector itself ---------------------------------------------------
+
+
+def test_spec_validates_site_and_kind():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("serve.nonsense", "compile")
+    with pytest.raises(ValueError, match="invalid for site"):
+        FaultSpec("serve.batch", "nan")  # nan is an output fault
+
+
+def test_budget_transient_fires_once_persistent_forever():
+    inj = FaultInjector([
+        FaultSpec("serve.batch", "compile", times=1),
+    ])
+    with pytest.raises(InjectedCompileFailure):
+        inj.on_batch(0, [0], "swc")
+    inj.on_batch(1, [0], "swc")  # budget consumed: no raise
+    assert len(inj.fired) == 1
+
+    inj = FaultInjector([
+        FaultSpec("serve.batch", "oom", times=0),  # persistent
+    ])
+    for index in range(3):
+        with pytest.raises(InjectedResourceExhausted):
+            inj.on_batch(index, [0], "swc")
+    assert len(inj.fired) == 3
+
+
+def test_selectors_are_conjunctive():
+    inj = FaultInjector([
+        FaultSpec(
+            "serve.batch", "compile", req_id=3, strategy="swc", times=0
+        ),
+    ])
+    inj.on_batch(0, [1, 2], "swc")  # req 3 absent
+    inj.on_batch(1, [3], "hwc")  # wrong strategy
+    assert inj.fired == []
+    with pytest.raises(InjectedCompileFailure):
+        inj.on_batch(2, [2, 3], "swc")
+
+
+def test_candidate_label_selector_substring_and_wildcard():
+    inj = FaultInjector([
+        FaultSpec("tune.candidate", "compile", label="8x16", times=0),
+    ])
+    inj.on_candidate("32x32")  # no match
+    with pytest.raises(InjectedCompileFailure):
+        inj.on_candidate("8x16@f2:s")  # substring match
+    inj = FaultInjector([
+        FaultSpec("tune.candidate", "oom", label="*", times=1),
+    ])
+    with pytest.raises(InjectedResourceExhausted):
+        inj.on_candidate("anything")
+
+
+def test_chaos_specs_deterministic_and_targeted():
+    ids = list(range(12))
+    specs_a, plan_a = chaos_specs(7, ids)
+    specs_b, plan_b = chaos_specs(7, ids)
+    assert plan_a == plan_b
+    assert [(s.site, s.kind, s.req_id) for s in specs_a] == [
+        (s.site, s.kind, s.req_id) for s in specs_b
+    ]
+    assert plan_a["poison"] in ids
+    assert plan_a["transient"] in ids
+    assert plan_a["poison"] != plan_a["transient"]
+    # A different seed reshuffles (over many ids this is stable enough
+    # to assert for the specific seeds used here).
+    _, plan_c = chaos_specs(8, ids)
+    assert plan_c != plan_a
+
+
+def test_corrupt_cache_garbage_and_truncate(tmp_path):
+    target = tmp_path / "cache.json"
+    target.write_text('{"records": {}}')
+    inj = FaultInjector([FaultSpec("cache.file", "truncate", times=1)])
+    assert inj.corrupt_cache(target)
+    assert len(target.read_bytes()) < len('{"records": {}}')
+    inj = FaultInjector([FaultSpec("cache.file", "garbage", times=1)])
+    assert inj.corrupt_cache(target)
+    with pytest.raises(ValueError):
+        import json
+
+        json.loads(target.read_text())
+    # Exhausted injector: no further corruption.
+    before = target.read_bytes()
+    assert not inj.corrupt_cache(target)
+    assert target.read_bytes() == before
+
+
+# --- serving failure domains ----------------------------------------------
+
+
+def test_transient_batch_failure_retries_to_completion():
+    inj = FaultInjector([
+        FaultSpec("serve.batch", "compile", req_id=0, times=1),
+    ])
+    server = _server(faults=inj)
+    results = server.serve(RequestQueue([_req(0), _req(1)]))
+    assert sorted(results) == [0, 1]
+    assert server.error_reports == {}
+    [rep] = server.reports
+    assert rep.retries == 1
+    assert rep.strategy == "swc"  # healed without leaving the rung
+    assert rep.statuses == {0: "retried", 1: "retried"}
+    assert server.request_status == {0: "retried", 1: "retried"}
+
+
+def test_strategy_failure_degrades_down_the_ladder():
+    """A strategy-attributed persistent failure (every swc launch
+    raises) exhausts retries, then the bucket degrades to the hwc rung
+    and completes there — and stays degraded for later batches."""
+    inj = FaultInjector([
+        FaultSpec("serve.batch", "oom", strategy="swc", times=0),
+    ])
+    server = _server(faults=inj, max_batch=2)
+    results = server.serve(RequestQueue([_req(i) for i in range(4)]))
+    assert sorted(results) == [0, 1, 2, 3]
+    assert server.error_reports == {}
+    assert [rep.strategy for rep in server.reports] == ["hwc", "hwc"]
+    assert server.reports[0].statuses == {0: "degraded", 1: "degraded"}
+    # The rung stuck: the second batch went straight to hwc (no new
+    # swc attempts → exactly 3 oom firings from the first batch).
+    assert len(inj.fired) == 3
+    assert server._strategy_for  # rung persisted for the bucket
+
+
+def test_poison_request_is_bisected_and_quarantined():
+    """A request-attributed failure (the batch fails at EVERY rung as
+    long as the poison member is present) drives bisection: the poison
+    is isolated and quarantined, every other member completes, and the
+    bucket's degradation rung is reset afterwards."""
+    inj = FaultInjector([
+        FaultSpec("serve.batch", "compile", req_id=2, times=0),
+    ])
+    server = _server(faults=inj)
+    results = server.serve(RequestQueue([_req(i) for i in range(4)]))
+    assert sorted(results) == [0, 1, 3]
+    assert set(server.error_reports) == {2}
+    assert "InjectedCompileFailure" in server.error_reports[2]["error"]
+    assert server.request_status[2] == "quarantined"
+    # Healthy members completed (possibly on a degraded rung reached
+    # while the poison was still attributed to the strategy).
+    assert server.request_status[0] != "quarantined"
+    assert server.request_status[3] != "quarantined"
+    # Quarantine re-attributed the fault to the request: rung reset.
+    assert server._strategy_for == {}
+    # The quarantined singleton got its own report row.
+    quarantine_reports = [
+        rep for rep in server.reports
+        if rep.statuses.get(2) == "quarantined"
+    ]
+    assert len(quarantine_reports) == 1
+    assert quarantine_reports[0].batch == 1
+
+
+def test_nan_output_quarantines_only_the_poisoned_member():
+    inj = FaultInjector([
+        FaultSpec("serve.output", "nan", req_id=1, times=0),
+    ])
+    server = _server(faults=inj)
+    results = server.serve(RequestQueue([_req(i) for i in range(3)]))
+    assert sorted(results) == [0, 2]
+    assert set(server.error_reports) == {1}
+    assert "non-finite" in server.error_reports[1]["error"]
+    [rep] = server.reports  # no bisection: the batch itself succeeded
+    assert rep.statuses == {0: "ok", 1: "quarantined", 2: "ok"}
+    for rid in (0, 2):
+        assert np.isfinite(results[rid]).all()
+
+
+def test_validate_output_can_be_disabled():
+    inj = FaultInjector([
+        FaultSpec("serve.output", "inf", req_id=0, times=0),
+    ])
+    server = _server(faults=inj, validate_output=False)
+    results = server.serve(RequestQueue([_req(0)]))
+    assert np.isinf(results[0]).all()
+    assert server.error_reports == {}
+
+
+def test_slow_fault_stalls_without_failing():
+    inj = FaultInjector(
+        [FaultSpec("serve.batch", "slow", index=0, times=1)],
+        slow_s=0.05,
+    )
+    server = _server(faults=inj)
+    results = server.serve(RequestQueue([_req(0)]))
+    assert sorted(results) == [0]
+    assert inj.fired == [
+        ("serve.batch", "slow", "index=0 reqs=[0] strategy=swc")
+    ]
+    assert server.reports[0].seconds >= 0.05
+
+
+def test_retry_policy_ladder_and_auto_reentry():
+    policy = RetryPolicy()
+    assert policy.degrade("tc") == "swc_stream"
+    assert policy.degrade("swc_stream") == "swc"
+    assert policy.degrade("swc") == "hwc"
+    assert policy.degrade("hwc") is None
+    assert policy.degrade("auto") == "swc"
+    assert policy.degrade("mystery") is None
+    assert policy.backoff(1) == policy.backoff_s
+    assert policy.backoff(2) == 2 * policy.backoff_s
+
+
+# --- supervisor recoverable tuple -----------------------------------------
+
+
+class _FakeCkptMgr:
+    """In-memory checkpoint manager: just enough surface for
+    ``Supervisor.run`` (save/wait/latest_step)."""
+
+    def __init__(self):
+        self.saved = {}
+
+    def save(self, step, state):
+        self.saved[step] = state
+
+    def wait(self):
+        pass
+
+    def latest_step(self):
+        return max(self.saved) if self.saved else None
+
+
+def _flaky_step(fail_at, exc):
+    fired = []
+
+    def step_fn(state, step):
+        if step == fail_at and not fired:
+            fired.append(step)
+            raise exc
+        return state + 1
+
+    return step_fn
+
+
+def test_supervisor_default_only_recovers_simulated_failure():
+    sup = Supervisor(_FakeCkptMgr(), ckpt_every=5)
+    with pytest.raises(OSError):
+        sup.run(
+            0, _flaky_step(7, OSError("flaky fs")), 10,
+            restore_fn=lambda s, step: (step or 0, step or 0),
+        )
+
+
+def test_supervisor_recoverable_tuple_widens_restart_trigger():
+    mgr = _FakeCkptMgr()
+    sup = Supervisor(
+        mgr, ckpt_every=5, recoverable=(SimulatedFailure, OSError)
+    )
+    state, report = sup.run(
+        0, _flaky_step(7, OSError("flaky fs")), 10,
+        restore_fn=lambda s, step: (mgr.saved[step], step),
+    )
+    assert report["restarts"] == 1
+    assert report["failed_steps"] == [7]
+    assert state == 10  # replayed 5 → 10 after restore

@@ -69,7 +69,7 @@ def test_server_routes_every_request_to_its_bucket_result():
     bucket."""
     queue = demo_queue([(16, 32), (12, 24)], n_steps=4, requests=10)
     expect_shape = {
-        r.req_id: (1,) + r.bucket_key[0] for r in queue._items
+        r.req_id: (1,) + r.bucket_key[0] for r in queue.snapshot()
     }
     server = SimServer(strategy="swc", max_batch=4)
     results = server.serve(queue)
@@ -150,7 +150,7 @@ def test_server_matches_per_member_serving():
     alone (B=1 path) — bucketing is a throughput decision, not a
     numerics decision."""
     queue = demo_queue([(12, 24)], n_steps=4, requests=4, seed=7)
-    singles = {r.req_id: r for r in queue._items}
+    singles = {r.req_id: r for r in queue.snapshot()}
     batched = SimServer(strategy="swc", max_batch=4).serve(queue)
     solo_server = SimServer(strategy="swc", max_batch=1)
     for rid, req in singles.items():

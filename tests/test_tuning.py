@@ -278,3 +278,179 @@ def test_conv1d_auto_matches_explicit(cache_dir):
     assert any(
         k.startswith("conv1d_depthwise|") for k in TuningCache().items()
     )
+
+
+# --- corruption quarantine (ISSUE 8) --------------------------------------------
+
+
+def _seed_cache(cache_dir):
+    TuningCache().put(
+        KEY, TuningRecord(block=(4, 8, 16), timings_us={}, source="measured")
+    )
+    return cache_dir / "cache.json"
+
+
+def test_truncated_cache_is_quarantined_and_rebuilt(cache_dir):
+    """A cache.json cut short mid-write (crashed writer) is renamed
+    aside — not silently shadowed — and the next put starts clean."""
+    path = _seed_cache(cache_dir)
+    data = path.read_bytes()
+    path.write_bytes(data[: len(data) // 2])
+
+    fresh = TuningCache()
+    assert fresh.get(KEY) is None  # corrupt view is empty, not wrong
+    assert (cache_dir / "cache.json.corrupt").exists()
+    assert (cache_dir / "cache.json.corrupt").read_bytes() == data[: len(data) // 2]
+
+    fresh.put(KEY, TuningRecord(block=(8, 8, 16), timings_us={}, source="measured"))
+    assert TuningCache().get(KEY).block == (8, 8, 16)
+
+
+def test_garbage_cache_is_quarantined(cache_dir):
+    path = _seed_cache(cache_dir)
+    path.write_text("{garbage: definitely, not json\x00")
+    assert TuningCache().get(KEY) is None
+    assert (cache_dir / "cache.json.corrupt").exists()
+    assert not path.exists()  # moved aside, not copied
+
+
+def test_valid_json_wrong_layout_is_quarantined(cache_dir):
+    path = _seed_cache(cache_dir)
+    path.write_text('["not", "a", "cache", "document"]')
+    assert TuningCache().get(KEY) is None
+    assert (cache_dir / "cache.json.corrupt").exists()
+
+
+def test_repeated_corruption_numbers_the_corpses(cache_dir):
+    for n in range(3):
+        path = _seed_cache(cache_dir)
+        path.write_text("not json at all")
+        assert TuningCache().get(KEY) is None
+    names = sorted(p.name for p in cache_dir.glob("cache.json.corrupt*"))
+    assert names == [
+        "cache.json.corrupt", "cache.json.corrupt.1", "cache.json.corrupt.2",
+    ]
+
+
+def test_missing_cache_is_cold_start_not_corruption(cache_dir):
+    assert TuningCache().get(KEY) is None
+    assert list(cache_dir.glob("cache.json.corrupt*")) == []
+
+
+_STRESS_WORKER = """
+import sys
+from repro.tuning import TuningCache, TuningKey, TuningRecord
+
+worker = int(sys.argv[1])
+cache = TuningCache()
+for i in range(8):
+    key = TuningKey(
+        kernel="stress", strategy=f"w{worker}", domain=(i,),
+        radii=(1,), n_f=1, n_out=1, dtype="float32", backend="cpu",
+    )
+    cache.put(key, TuningRecord(block=2 ** (i + 4), timings_us={}, source="measured"))
+"""
+
+
+def test_multiprocess_put_loses_no_record(cache_dir):
+    """N processes hammering put() concurrently: the advisory lock +
+    read-merge-write must preserve every record from every worker."""
+    n_workers = 4
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", _STRESS_WORKER, str(w)],
+            env=_subprocess_env(cache_dir),
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for w in range(n_workers)
+    ]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    items = TuningCache().items()
+    stress = {k for k in items if k.startswith("stress|")}
+    assert len(stress) == n_workers * 8, sorted(stress)
+    for w in range(n_workers):
+        for i in range(8):
+            key_id = f"stress|w{w}|{i}|1|1|1|float32|cpu"
+            assert key_id in items, key_id
+            assert items[key_id].block == 2 ** (i + 4)
+
+
+# --- failed-candidate rows (ISSUE 8) --------------------------------------------
+
+
+def test_failed_candidates_recorded_and_skipped_on_retune(cache_dir):
+    """A candidate whose measurement raises becomes a ``failed`` row of
+    the persisted record; a later (forced) re-tune never re-launches
+    it."""
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    bad = {cands[0].block}
+    calls = []
+
+    def measure(cand):
+        calls.append(cand.block)
+        if cand.block in bad:
+            raise RuntimeError("RESOURCE_EXHAUSTED: VMEM")
+        return 1.0
+
+    sess = TuningSession(top_k=2)
+    rec = sess.tune(KEY, cands, measure)
+    assert rec.source == "measured"
+    assert rec.block != cands[0].block
+    assert len(rec.failed) == 1
+    assert "RESOURCE_EXHAUSTED" in next(iter(rec.failed.values()))
+
+    # Persisted: a fresh session sees the failed row.
+    assert len(TuningCache().get(KEY).failed) == 1
+
+    calls.clear()
+    rec2 = TuningSession(top_k=2).tune(KEY, cands, measure, force=True)
+    assert cands[0].block not in calls  # known-bad skipped
+    assert len(calls) == 2  # top-k drawn from the healthy pool
+    assert rec2.failed == rec.failed  # carried forward
+
+
+def test_all_failed_still_resolves_and_marks_every_row(cache_dir):
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+
+    def measure(cand):
+        raise RuntimeError("launch failed")
+
+    sess = TuningSession(top_k=2)
+    rec = sess.tune(KEY, cands, measure)
+    assert rec.source == "model"
+    assert len(rec.failed) == 2  # every attempted candidate marked
+
+
+def test_failed_rows_roundtrip_and_old_records_parse(cache_dir):
+    rec = TuningRecord(
+        block=(4, 8, 16), timings_us={"4x8x16": 9.0}, source="measured",
+        failed={"8x8x16": "InjectedCompileFailure: boom"},
+    )
+    TuningCache().put(KEY, rec)
+    got = TuningCache().get(KEY)
+    assert got.failed == {"8x8x16": "InjectedCompileFailure: boom"}
+    # Pre-ISSUE-8 records (no "failed" key) parse with no failures.
+    d = rec.to_json()
+    del d["failed"]
+    assert TuningRecord.from_json(d).failed == {}
+
+
+def test_injected_candidate_fault_lands_in_failed_rows(cache_dir):
+    """The module-level active injector (the chaos seam) turns a
+    targeted candidate fault into a failed row, and tuning still
+    resolves a winner."""
+    from repro.ft.faults import FaultInjector, FaultSpec
+    from repro.ft import faults as ftfaults
+
+    cands = fused_nd_candidates((8, 8, 16), (1, 1, 1), 2, 1, 4)
+    inj = FaultInjector([
+        FaultSpec("tune.candidate", "compile", label="*", times=1),
+    ])
+    with ftfaults.active(inj):
+        rec = TuningSession(top_k=2).tune(KEY, cands, lambda c: 1.0)
+    assert rec.source == "measured"
+    assert len(rec.failed) == 1
+    assert "InjectedCompileFailure" in next(iter(rec.failed.values()))
+    assert inj.fired[0][0] == "tune.candidate"
