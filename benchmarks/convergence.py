@@ -1,0 +1,85 @@
+"""MMS convergence benchmark — the generalized-operator acceptance gate
+as a BENCH artifact.
+
+Sweeps the method-of-manufactured-solutions harness
+(``repro.verify.mms``) over accuracy orders × ranks × boundary
+families, fits the observed error slope for each, and writes the
+results to ``BENCH_convergence.json`` so CI can assert the fitted
+orders (and the perf-trajectory archive records them next to the
+timing artifacts).
+
+Unlike the fig* timing benchmarks this one measures CORRECTNESS
+trajectories: a row's ``slope`` is the observed convergence order of
+the full pad → plan → emit pipeline at that configuration, and the
+``nominal`` column is what the weight generator claims. ``--smoke``
+shrinks the matrix for CI (orders {2, 8}, ranks {1, 2}, plus the
+neumann/neumann2 ghost-fill gap pair); the full run adds order 6,
+rank 3, and a cross-strategy sweep at order 6 proving the slope is
+strategy-invariant.
+
+Usage::
+
+    python -m benchmarks.convergence [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.verify.mms import run_convergence  # noqa: E402
+
+
+def _row(result) -> dict:
+    d = result.as_dict()
+    print(
+        f"convergence rank={d['rank']} acc={d['accuracy']} "
+        f"{d['boundary']:10s} {d['dtype']:8s} {d['strategy']:4s} "
+        f"slope={d['slope']:6.2f} (nominal {d['nominal']})"
+    )
+    return d
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI matrix")
+    ap.add_argument("--json", default="BENCH_convergence.json")
+    args = ap.parse_args(argv)
+
+    orders = (2, 8) if args.smoke else (2, 4, 6, 8)
+    ranks = (1, 2) if args.smoke else (1, 2, 3)
+    rows = []
+    for rank in ranks:
+        for acc in orders:
+            for bc in ("periodic", "dirichlet"):
+                rows.append(_row(run_convergence(rank, acc, bc)))
+    # The ghost-fill order gap (satellite regression): edge-replicate
+    # "neumann" caps the slope near 0.5, the mirror-about-node
+    # "neumann2" fill releases the interior order.
+    for mode in ("neumann", "neumann2"):
+        rows.append(_row(run_convergence(1, 6, mode)))
+    if not args.smoke:
+        # Strategy invariance: the slope is a property of the weights,
+        # not the lowering — every caching regime must reproduce it.
+        for strategy in ("hwc", "swc", "swc_stream", "tc"):
+            rows.append(
+                _row(
+                    run_convergence(
+                        2, 6, "periodic", strategy=strategy,
+                        # tc is f32-only; coarse grids keep its
+                        # truncation error above the f32 floor.
+                        dtype="float32" if strategy == "tc" else "float64",
+                        ns=(8, 12, 16) if strategy == "tc" else None,
+                    )
+                )
+            )
+    with open(args.json, "w") as fh:
+        json.dump({"rows": rows, "smoke": bool(args.smoke)}, fh, indent=1)
+    print(f"wrote {args.json} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

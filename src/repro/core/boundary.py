@@ -1,23 +1,88 @@
-"""Boundary value functions β(f, i) — paper Eq. 2.
+"""Boundary value functions β(f, i) — paper Eq. 2 — and
+boundary-modified derivative operators for non-periodic domains.
 
 The augmented array f̂ extends the computational domain by the stencil
 influence radius. Supported boundary families map to the padding modes
 used by the paper's test problems (periodic 2π domains for diffusion/MHD)
 plus the usual PDE suspects.
+
+Ghost-cell accuracy orders (what each padding mode is worth near a
+wall, regardless of the interior operator's order):
+
+* ``periodic``  — exact: the wrap IS the solution's continuation.
+* ``dirichlet`` — the constant ghost value is a 0th-order extrapolation
+  of the solution unless the true boundary value is that constant; even
+  then derivatives above the wall value degrade to O(h).
+* ``neumann``   — edge replicate: models ∂f/∂n = 0 by a piecewise-
+  constant extension, a FIRST-order ghost fill (the mirror point
+  f(-h) = f(0) forces f'(0) = 0 only to O(h)). Kept under this name
+  for backward compatibility; see ``neumann2``.
+* ``neumann2``  — mirror about the boundary NODE (ghost ``f(-h) =
+  f(h)``): the even extension, which enforces f'(0) = 0 to SECOND
+  order on a vertex-centered grid. This is the textbook ghost fill for
+  zero-gradient walls and what the "neumann" mode should have been;
+  the MMS convergence suite regression-tests the one-order slope gap
+  between the two.
+* ``reflect``   — same even extension as ``neumann2`` (mirror about the
+  boundary cell), named for its geometric reading.
+
+Any ghost fill caps the wall accuracy at its own order. To keep the
+FULL interior order up to the wall, :func:`derivative_matrix_1d` builds
+boundary-MODIFIED weight rows instead: within ``r`` cells of a
+non-periodic face the centered stencil is replaced by an offset
+(one-sided) stencil of the same order evaluated entirely on interior
+samples — no ghost data at all — following the Fornberg-weight
+construction (``repro.core.stencil.offset_difference_coeffs``).
+:func:`apply_operator_set_bc` evaluates a whole generated operator set
+that way; the fusion layer blends it over the wall-adjacent cells of
+the fast padded kernel output (``FusedStencilOp(boundary_weights=
+True)``).
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
-_MODES = ("periodic", "dirichlet", "neumann", "reflect")
+_MODES = ("periodic", "dirichlet", "neumann", "neumann2", "reflect")
+
+# jnp.pad mode implementing each boundary family ("dirichlet" handled
+# separately — it needs constant_values).
+_PAD_MODE = {
+    "periodic": "wrap",
+    "neumann": "edge",
+    "neumann2": "reflect",
+    "reflect": "reflect",
+}
+
+
+def _normalize_modes(
+    mode: str | Sequence[str], n_axes: int
+) -> tuple[str, ...]:
+    """Per-axis mode tuple from a scalar or per-axis spec."""
+    modes = (
+        (mode,) * n_axes
+        if isinstance(mode, str)
+        else tuple(mode)
+    )
+    if len(modes) != n_axes:
+        raise ValueError(
+            f"got {len(modes)} boundary modes for {n_axes} spatial axes"
+        )
+    for m in modes:
+        if m not in _MODES:
+            raise ValueError(
+                f"unknown boundary mode {m!r}; want one of {_MODES}"
+            )
+    return modes
 
 
 def pad(
     f: jnp.ndarray,
     radius: int | Sequence[int],
-    mode: str = "periodic",
+    mode: str | Sequence[str] = "periodic",
     *,
     spatial_axes: Sequence[int] | None = None,
     value: float = 0.0,
@@ -25,30 +90,47 @@ def pad(
     """Construct f̂ by padding ``f`` with ``radius`` ghost cells per
     spatial axis.
 
-    ``spatial_axes`` defaults to all axes. ``radius`` may be per-axis.
-    Modes:
-      * ``periodic`` — wrap (the paper's simulation setup);
-      * ``dirichlet`` — constant ``value``;
-      * ``neumann``   — zero-gradient (edge replicate);
-      * ``reflect``   — mirror about the boundary cell.
+    ``spatial_axes`` defaults to all axes. ``radius`` may be per-axis,
+    and so may ``mode`` (one entry per spatial axis, e.g. a channel
+    flow periodic along x but walled along y). Modes and their ghost
+    accuracy orders are documented in the module docstring:
+    ``periodic`` (wrap, the paper's setup), ``dirichlet`` (constant
+    ``value``), ``neumann`` (zero-gradient edge replicate, 1st order),
+    ``neumann2`` (mirror-about-node even extension, 2nd order) and
+    ``reflect`` (same mirror, geometric name).
     """
-    if mode not in _MODES:
-        raise ValueError(f"unknown boundary mode {mode!r}; want one of {_MODES}")
     axes = tuple(range(f.ndim)) if spatial_axes is None else tuple(spatial_axes)
+    modes = _normalize_modes(mode, len(axes))
     if isinstance(radius, int):
         radius = [radius] * len(axes)
     if len(radius) != len(axes):
         raise ValueError("radius/spatial_axes length mismatch")
-    pad_width = [(0, 0)] * f.ndim
-    for a, r in zip(axes, radius):
+    if len(set(modes)) == 1:
+        # Uniform mode: one jnp.pad over all axes (the common case).
+        pad_width = [(0, 0)] * f.ndim
+        for a, r in zip(axes, radius):
+            pad_width[a] = (int(r), int(r))
+        return _pad_one(f, pad_width, modes[0], value)
+    # Mixed per-axis modes: pad axis by axis. Corner ghost regions are
+    # filled by composition (each axis's rule applied to the already-
+    # padded neighbor), which is the standard ghost-corner treatment.
+    out = f
+    for a, r, m in zip(axes, radius, modes):
+        pad_width = [(0, 0)] * f.ndim
         pad_width[a] = (int(r), int(r))
-    if mode == "periodic":
-        return jnp.pad(f, pad_width, mode="wrap")
+        out = _pad_one(out, pad_width, m, value)
+    return out
+
+
+def _pad_one(
+    f: jnp.ndarray,
+    pad_width: Sequence[tuple[int, int]],
+    mode: str,
+    value: float,
+) -> jnp.ndarray:
     if mode == "dirichlet":
         return jnp.pad(f, pad_width, mode="constant", constant_values=value)
-    if mode == "neumann":
-        return jnp.pad(f, pad_width, mode="edge")
-    return jnp.pad(f, pad_width, mode="reflect")
+    return jnp.pad(f, pad_width, mode=_PAD_MODE[mode])
 
 
 def unpad(
@@ -65,3 +147,170 @@ def unpad(
     for a, r in zip(axes, radius):
         slicer[a] = slice(int(r), f.shape[a] - int(r)) if r else slice(None)
     return f[tuple(slicer)]
+
+
+# ---------------------------------------------------------------------------
+# Boundary-modified weight rows (the full-order alternative to ghost
+# fills near non-periodic surfaces).
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def derivative_matrix_1d(
+    n: int,
+    deriv: int,
+    accuracy: int,
+    spacing: float = 1.0,
+    mode: str = "dirichlet",
+) -> np.ndarray:
+    """Dense ``(n, n)`` derivative matrix with boundary-modified rows.
+
+    Interior rows (``r ≤ i < n − r`` with ``r = radius``) carry the
+    centered Fornberg weights of the requested ``accuracy``; for
+    ``mode="periodic"`` the off-grid columns wrap, and for any
+    non-periodic mode the first/last ``r`` rows are replaced by OFFSET
+    stencils of the same nominal order
+    (:func:`repro.core.stencil.offset_difference_coeffs`): row ``i < r``
+    reads columns ``0..deriv+accuracy−1`` with the evaluation point at
+    position ``i``, and symmetrically at the high wall. Offset rows are
+    pure interpolation on interior samples — they use no ghost data,
+    so the same matrix serves Dirichlet and Neumann walls (the PDE's
+    boundary data enters through the solution values, not the weights),
+    which is why the non-periodic modes all share one table.
+
+    Rows scale by ``spacing**-deriv``. ``deriv=0`` is the identity.
+    Raises ``ValueError`` for grids too small to hold the stencil.
+    """
+    from repro.core.stencil import (
+        central_difference_coeffs,
+        offset_difference_coeffs,
+    )
+
+    if mode not in _MODES:
+        raise ValueError(
+            f"unknown boundary mode {mode!r}; want one of {_MODES}"
+        )
+    if deriv == 0:
+        return np.eye(n)
+    center = central_difference_coeffs(deriv, accuracy)
+    r = (len(center) - 1) // 2
+    scale = float(spacing) ** (-deriv)
+    D = np.zeros((n, n))
+    if mode == "periodic":
+        if n < len(center):
+            raise ValueError(
+                f"periodic grid of {n} points cannot hold the "
+                f"{len(center)}-tap centered stencil"
+            )
+        for i in range(n):
+            for k, w in enumerate(center, start=-r):
+                D[i, (i + k) % n] += w * scale
+        return D
+    npts = deriv + accuracy
+    if n < npts:
+        raise ValueError(
+            f"non-periodic grid of {n} points cannot hold the "
+            f"{npts}-point offset stencil (deriv={deriv}, "
+            f"accuracy={accuracy})"
+        )
+    for i in range(n):
+        if r <= i < n - r:
+            for k, w in enumerate(center, start=-r):
+                D[i, i + k] += w * scale
+        else:
+            # Offset row: window pinned inside the domain, evaluation
+            # point at `left` within it.
+            left = i if i < r else i - (n - npts)
+            w = offset_difference_coeffs(deriv, accuracy, left)
+            D[i, i - left:i - left + npts] = np.asarray(w) * scale
+    return D
+
+
+def apply_operator_spec(
+    f: jnp.ndarray,
+    spec,
+    mode: str | Sequence[str],
+    *,
+    spatial_axes: Sequence[int] | None = None,
+) -> jnp.ndarray:
+    """Evaluate one :class:`~repro.core.stencil.OperatorSpec` on the
+    UNPADDED field with boundary-modified weight rows.
+
+    Each term's per-axis derivative is applied as a dense
+    :func:`derivative_matrix_1d` contraction along that spatial axis
+    (full interior order up to the wall on non-periodic axes), terms
+    summed with their coefficients. ``mode`` is scalar or per spatial
+    axis; ``spatial_axes`` defaults to all of ``f``'s axes.
+    """
+    axes = (
+        tuple(range(f.ndim))
+        if spatial_axes is None
+        else tuple(spatial_axes)
+    )
+    modes = _normalize_modes(mode, len(axes))
+    out = None
+    for dmi, coeff in spec.terms:
+        if len(dmi) != len(axes):
+            raise ValueError(
+                f"term multi-index {dmi} does not match {len(axes)} "
+                "spatial axes"
+            )
+        term = f
+        for a, d in enumerate(dmi):
+            if d == 0:
+                continue
+            if not spec.accuracy:
+                raise ValueError(
+                    "OperatorSpec with derivative terms must carry a "
+                    "nonzero accuracy order for boundary-modified "
+                    "evaluation"
+                )
+            h = float(spec.spacing[a]) if spec.spacing else 1.0
+            D = derivative_matrix_1d(
+                int(f.shape[axes[a]]), int(d), int(spec.accuracy),
+                h, modes[a],
+            )
+            term = _apply_matrix(term, jnp.asarray(D, dtype=f.dtype), axes[a])
+        out = coeff * term if out is None else out + coeff * term
+    if out is None:
+        raise ValueError("OperatorSpec has no terms")
+    return out
+
+
+def _apply_matrix(f: jnp.ndarray, D: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Contract ``D`` (rows×cols) against ``f`` along ``axis``."""
+    g = jnp.tensordot(f, D, axes=[[axis], [1]])
+    return jnp.moveaxis(g, -1, axis)
+
+
+def apply_operator_set_bc(
+    f: jnp.ndarray,
+    ops,
+    mode: str | Sequence[str],
+    *,
+    spatial_axes: Sequence[int] | None = None,
+) -> dict[str, jnp.ndarray]:
+    """Boundary-accurate reference evaluation of a whole operator set:
+    ``{name: derivative}`` on the UNPADDED field, each member evaluated
+    through :func:`apply_operator_spec` (offset rows at non-periodic
+    walls, wrap on periodic axes) — the full-order counterpart of
+    ``repro.kernels.ref.apply_operator_set``, used by the fusion
+    layer's ``boundary_weights`` blend and the MMS harness.
+
+    Every member must carry :class:`OperatorSpec` metadata (generated
+    operators do; hand-built tap sets raise).
+    """
+    out = {}
+    for s in ops.ops:
+        if s.spec is None:
+            raise ValueError(
+                f"operator {s.name!r} has no OperatorSpec metadata — "
+                "boundary-modified weights need the generated "
+                "(derivative, accuracy, spacing) description, not raw "
+                "taps; build it with axis_stencil/laplacian_stencil/"
+                "derivative_operator_set"
+            )
+        out[s.name] = apply_operator_spec(
+            f, s.spec, mode, spatial_axes=spatial_axes
+        )
+    return out

@@ -60,6 +60,39 @@ def fornberg_weights(z: float, x: Sequence[float], m: int) -> np.ndarray:
 
 
 @lru_cache(maxsize=None)
+def offset_difference_coeffs(
+    deriv: int, accuracy: int, left: int
+) -> np.ndarray:
+    """One-sided/offset finite-difference coefficients (the boundary-
+    modified weight rows of ``core.boundary``).
+
+    Weights approximating the ``deriv``-th derivative at a point with
+    only ``left`` grid neighbors available toward the low side (a point
+    ``left`` cells from a non-periodic wall): the Fornberg window spans
+    offsets ``-left .. -left + npts - 1`` with ``npts = deriv +
+    accuracy`` samples, which guarantees formal order ≥ ``accuracy``
+    for any window placement — fully one-sided rows (``left = 0``) and
+    every offset row up to the first centered one use the same point
+    count, so the operator order is uniform across the domain.
+
+    Returns coefficients in units of ``h**-deriv``; ``deriv = 0``
+    returns the single-tap identity. Raises ``ValueError`` on an odd
+    ``accuracy`` (same contract as :func:`central_difference_coeffs`).
+    """
+    if accuracy % 2 != 0:
+        raise ValueError("finite differences here need even accuracy order")
+    if left < 0:
+        raise ValueError(f"left must be >= 0, got {left}")
+    if deriv == 0:
+        return np.array([1.0])
+    npts = deriv + accuracy
+    offsets = np.arange(-left, npts - left, dtype=np.float64)
+    w = fornberg_weights(0.0, offsets, deriv)[:, deriv]
+    w[np.abs(w) < 1e-12] = 0.0
+    return w
+
+
+@lru_cache(maxsize=None)
 def central_difference_coeffs(deriv: int, accuracy: int) -> np.ndarray:
     """1-D central-difference coefficients.
 
@@ -84,15 +117,73 @@ def central_difference_coeffs(deriv: int, accuracy: int) -> np.ndarray:
 
 
 @dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """Analytic identity of a generated stencil operator.
+
+    ``terms`` is the operator as a sum of scaled partial derivatives:
+    each entry is ``(deriv, coeff)`` where ``deriv`` is the per-axis
+    derivative multi-index (e.g. ``(0, 2)`` for ∂²/∂x² at rank 2) and
+    ``coeff`` its scalar weight — so the merged diffusion stencil
+    ``1 + Δt·α·∇²`` carries ``((0,…), 1.0)`` plus one ``(2·e_a, Δt·α)``
+    term per axis. ``accuracy`` is the even finite-difference order the
+    tap weights were generated at (0 = exact/unknown, e.g. the identity)
+    and ``spacing`` the per-axis grid spacing baked into the weights.
+
+    This is what lets downstream layers treat the *operator* as a plan
+    axis: the accuracy joins strategy ids / tuning keys (``:o{A}``),
+    and the boundary module can regenerate order-preserving one-sided
+    weight rows (:func:`offset_difference_coeffs`) for the same
+    analytic operator near non-periodic walls.
+    """
+
+    terms: tuple[tuple[tuple[int, ...], float], ...]
+    accuracy: int = 0
+    spacing: tuple[float, ...] = ()
+
+    def scaled(self, s: float) -> "OperatorSpec":
+        return OperatorSpec(
+            tuple((d, c * s) for d, c in self.terms),
+            self.accuracy, self.spacing,
+        )
+
+    def merged(self, other: "OperatorSpec") -> "OperatorSpec | None":
+        """Metadata of the SUM of two operators, or None when their
+        identities can't be combined (different spacings, or two
+        distinct nonzero accuracies)."""
+        if self.spacing and other.spacing and self.spacing != other.spacing:
+            return None
+        accs = {a for a in (self.accuracy, other.accuracy) if a}
+        if len(accs) > 1:
+            return None
+        taps: dict[tuple[int, ...], float] = {}
+        for d, c in self.terms + other.terms:
+            taps[d] = taps.get(d, 0.0) + c
+        return OperatorSpec(
+            tuple(sorted(taps.items())),
+            accs.pop() if accs else 0,
+            self.spacing or other.spacing,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class StencilSpec:
     """A single linear stencil operator: taps[offset] = coefficient.
 
     ``offsets``: (n_taps, ndim) int array. ``coeffs``: (n_taps,) float64.
+
+    ``spec`` optionally carries the operator's analytic identity
+    (:class:`OperatorSpec` — derivative terms, generation accuracy,
+    spacing). It is metadata: excluded from equality/hash, attached by
+    the generator entry points (``axis_stencil`` & friends), and
+    propagated through ``pruned``/``scaled``/``__add__``.
     """
 
     offsets: tuple[Offset, ...]
     coeffs: tuple[float, ...]
     name: str = ""
+    spec: OperatorSpec | None = dataclasses.field(
+        default=None, compare=False
+    )
 
     def __post_init__(self):
         if len(self.offsets) != len(self.coeffs):
@@ -127,12 +218,14 @@ class StencilSpec:
             tuple(self.offsets[i] for i in keep),
             tuple(self.coeffs[i] for i in keep),
             self.name,
+            self.spec,
         )
 
     def scaled(self, s: float, name: str | None = None) -> "StencilSpec":
         return StencilSpec(
             self.offsets, tuple(float(c) * s for c in self.coeffs),
             self.name if name is None else name,
+            None if self.spec is None else self.spec.scaled(s),
         )
 
     def __add__(self, other: "StencilSpec") -> "StencilSpec":
@@ -142,9 +235,13 @@ class StencilSpec:
         for o, c in zip(other.offsets, other.coeffs):
             taps[o] = taps.get(o, 0.0) + c
         items = sorted(taps.items())
+        spec = None
+        if self.spec is not None and other.spec is not None:
+            spec = self.spec.merged(other.spec)
         return StencilSpec(
             tuple(o for o, _ in items), tuple(c for _, c in items),
             f"({self.name}+{other.name})",
+            spec,
         )
 
     def compose_outer(self, other: "StencilSpec", name: str = "") -> "StencilSpec":
@@ -176,7 +273,14 @@ def axis_stencil(
         o[axis] = k - r
         offsets.append(tuple(o))
         coeffs.append(float(c))
-    return StencilSpec(tuple(offsets), tuple(coeffs), name)
+    dmi = tuple(deriv if a == axis else 0 for a in range(ndim))
+    # Only the differentiated axis's spacing entry is meaningful here
+    # (the caller passes a scalar h for this axis alone).
+    sp = tuple(float(spacing) if a == axis else 1.0 for a in range(ndim))
+    return StencilSpec(
+        tuple(offsets), tuple(coeffs), name,
+        OperatorSpec(((dmi, 1.0),), accuracy if deriv else 0, sp),
+    )
 
 
 def laplacian_stencil(
@@ -191,7 +295,15 @@ def laplacian_stencil(
     out = axis_stencil(ndim, 0, 2, accuracy, spacing[0])
     for a in range(1, ndim):
         out = out + axis_stencil(ndim, a, 2, accuracy, spacing[a])
-    return StencilSpec(out.offsets, out.coeffs, name).pruned(0.0)
+    spec = OperatorSpec(
+        tuple(
+            (tuple(2 if b == a else 0 for b in range(ndim)), 1.0)
+            for a in range(ndim)
+        ),
+        accuracy,
+        tuple(float(s) for s in spacing),
+    )
+    return StencilSpec(out.offsets, out.coeffs, name, spec).pruned(0.0)
 
 
 def mixed_partial_stencil(
@@ -203,11 +315,21 @@ def mixed_partial_stencil(
         spacing = [float(spacing)] * ndim
     sa = axis_stencil(ndim, axis_a, 1, accuracy, spacing[axis_a])
     sb = axis_stencil(ndim, axis_b, 1, accuracy, spacing[axis_b])
-    return sa.compose_outer(sb, name)
+    out = sa.compose_outer(sb, name)
+    dmi = tuple(
+        int(a == axis_a) + int(a == axis_b) for a in range(ndim)
+    )
+    spec = OperatorSpec(
+        ((dmi, 1.0),), accuracy, tuple(float(s) for s in spacing)
+    )
+    return dataclasses.replace(out, spec=spec)
 
 
 def identity_stencil(ndim: int, name: str = "val") -> StencilSpec:
-    return StencilSpec((tuple([0] * ndim),), (1.0,), name)
+    return StencilSpec(
+        (tuple([0] * ndim),), (1.0,), name,
+        OperatorSpec(((tuple([0] * ndim), 1.0),), 0, ()),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -279,6 +401,27 @@ class OperatorSet:
     def flops_per_point(self, n_f: int) -> int:
         """Multiply-add FLOPs per grid point for the pruned tap set."""
         return int(2 * n_f * sum(len(s.offsets) for s in self.ops))
+
+    @property
+    def taps_per_point(self) -> int:
+        """Total taps every grid point evaluates across the set — the
+        tap-count input of the cost model's VPU compute term (one
+        multiply-add per tap per field)."""
+        return int(sum(len(s.offsets) for s in self.ops))
+
+    @property
+    def accuracy(self) -> int:
+        """The finite-difference accuracy order the set's derivative
+        operators were generated at — the ``:o{A}`` plan/tuning-key
+        axis. 0 when unknown (hand-built taps without
+        :class:`OperatorSpec` metadata, or no derivative operators) or
+        mixed (members generated at different orders)."""
+        accs = {
+            s.spec.accuracy
+            for s in self.ops
+            if s.spec is not None and s.spec.accuracy
+        }
+        return accs.pop() if len(accs) == 1 else 0
 
 
 def derivative_operator_set(

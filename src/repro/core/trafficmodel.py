@@ -353,6 +353,35 @@ def peak_hbm_bw(backend: str | None = None) -> float:
     return DEFAULT_PEAK_HBM_BW
 
 
+# Peak vector-unit (VPU) FLOP/s at f32, same keying as the MXU table.
+# TPU VPUs sustain roughly a quarter of the matrix-unit f32 rate (8×128
+# lanes × 2 ALU slots vs the 128×128 systolic array), which is the rate
+# the tap-by-tap swc/swc_stream/hwc regimes run their multiply-adds at.
+# The generalized-order cost model normalizes per-point stencil FLOPs
+# against this roof to weigh temporal fusion's redundant halo compute —
+# an order-2 operator (few taps) tolerates deep fusion where an order-8
+# one (4× the taps) may not.
+PEAK_VPU_FLOPS_F32: dict[str, float] = {
+    "v4": 34.375e12,
+    "v5e": 24.625e12,
+    "v5p": 57.375e12,
+    "v6e": 114.875e12,
+}
+DEFAULT_PEAK_VPU_FLOPS_F32 = 24.625e12  # v5e-class
+
+
+def peak_vpu_flops(backend: str | None = None) -> float:
+    """Platform peak VPU (vector unit) FLOP/s, same substring matching
+    as :func:`peak_mxu_flops`. Element-wise rate is dtype-agnostic on
+    the f32-wide VPU, so there is no itemsize scaling."""
+    if backend:
+        b = backend.lower()
+        for key, v in PEAK_VPU_FLOPS_F32.items():
+            if key in b:
+                return v
+    return DEFAULT_PEAK_VPU_FLOPS_F32
+
+
 def stencil_mxu_flops_per_step(
     domain: Sequence[int],
     block: Sequence[int],

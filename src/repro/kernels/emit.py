@@ -47,6 +47,12 @@ Strategies (paper Sec. 4.4, Figs. 4-5, on the TPU target):
 
 The HWC ("let the compiler manage residency") strategy lives in
 ``repro.kernels.ref`` as pure jnp.
+
+Every emitter consumes the plan's tap tables verbatim: the (offset,
+coefficient) sequences come from the generated Fornberg weights in
+``repro.core.stencil`` (any even accuracy order — the order is a plan
+axis, ``StencilPlan.accuracy``, joining the strategy id as ``:o{A}``),
+so no kernel body hardwires a stencil order. See docs/stencils.md.
 """
 from __future__ import annotations
 

@@ -103,16 +103,25 @@ def tc_groups_per_axis(ops: OperatorSet) -> tuple[int, ...]:
     return tuple(counts)
 
 
+# The paper's fixed operator order: accuracy-6 plans key UNMARKED (the
+# legacy strategy-id form), so every pre-existing cache record, warm
+# entry and golden id stays valid; any other generated order joins the
+# key as an explicit ``:o{A}`` suffix. 0 means "unknown" (hand-built
+# taps without OperatorSpec metadata) and also keys unmarked.
+DEFAULT_ACCURACY = 6
+
+
 def strategy_sid(
     strategy: str,
     rank: int,
     unroll: int = 1,
     fuse_steps: int | str = 1,
     batch: int = 1,
+    accuracy: int = 0,
 ) -> str:
     """Canonical strategy-id derivation — the ONE place the stream
-    axis, unroll factor, temporal depth and ensemble batch extent join
-    the cache key.
+    axis, unroll factor, temporal depth, ensemble batch extent and
+    operator accuracy order join the cache key.
 
     Used by both :attr:`StencilPlan.strategy_id` and the tuning layer's
     key mirror (``repro.tuning.session.fused_nd_key``), so the two can
@@ -129,6 +138,17 @@ def strategy_sid(
     the bare strategy name distinguishes it, and the generic suffixes
     compose — a fused batched MXU plan keys as ``tc:f{S}:b{B}``, which
     can never collide with any ``swc``-family id.
+
+    ``accuracy`` is the operator set's finite-difference order: any
+    order other than the paper default (:data:`DEFAULT_ACCURACY` = 6)
+    appends ``:o{A}``, so plans for the same domain at different
+    generated orders cache separately (``:o4`` never replays an
+    order-6 winner — the tap count, halo radii and compute/traffic
+    balance all change with the order). Order 6 and 0 ("unknown",
+    hand-built taps) key unmarked — the legacy id form, which keeps
+    every pre-existing record and golden key valid; distinct orders
+    still never collide because the per-axis radii (``accuracy/2``)
+    are part of every tuning key.
     """
     sid = strategy
     if strategy == "swc_stream":
@@ -143,6 +163,8 @@ def strategy_sid(
         sid += f":f{fuse_steps}"
     if batch != 1:
         sid += f":b{batch}"
+    if accuracy not in (0, DEFAULT_ACCURACY):
+        sid += f":o{accuracy}"
     return sid
 
 
@@ -209,8 +231,18 @@ class StencilPlan:
     # halo window/prologue per launch step. batch > 1 joins strategy_id
     # as :b{B} so batched records key separately.
     batch: int = 1
+    # Finite-difference accuracy order of the operator set this plan
+    # lowers (0 = unknown/hand-built taps). Derived by plan_stencil from
+    # the OperatorSpec metadata the weight generator attaches; joins
+    # strategy_id as :o{A} for non-default orders (see strategy_sid).
+    accuracy: int = 0
 
     def __post_init__(self):
+        if self.accuracy < 0 or self.accuracy % 2:
+            raise ValueError(
+                "accuracy must be 0 (unknown) or a positive even "
+                f"finite-difference order, got {self.accuracy}"
+            )
         if self.rank not in (1, 2, 3):
             raise ValueError(f"rank must be 1, 2 or 3, got {self.rank}")
         if self.batch < 1:
@@ -353,10 +385,11 @@ class StencilPlan:
         configuration, so they join the key (via :func:`strategy_sid`)
         — depth-1 and depth-2 plans cache separately, a y-streaming
         rank-2 plan (``swc_stream:sy``) never collides with a pipelined
-        one, and a B-member ensemble plan keys as ``:b{B}``."""
+        one, a B-member ensemble plan keys as ``:b{B}``, and a
+        non-default operator order as ``:o{A}``."""
         return strategy_sid(
             self.strategy, self.rank, self.unroll, self.fuse_steps,
-            self.batch,
+            self.batch, self.accuracy,
         )
 
     def tuning_key(self, backend: str | None = None):
@@ -388,6 +421,7 @@ def plan_stencil(
     unroll: int = 1,
     fuse_steps: int = 1,
     batch: int | None = None,
+    accuracy: int | None = None,
 ) -> StencilPlan:
     """Lower a fused-stencil problem to a :class:`StencilPlan`.
 
@@ -404,8 +438,13 @@ def plan_stencil(
     (8, 8, 128) lowers to (8, 128) at rank 2), and each axis is clamped
     to the largest divisor of the interior extent — non-block-divisible
     domains shrink the tile instead of failing.
+    ``accuracy`` defaults to the operator set's own finite-difference
+    order (the OperatorSpec metadata attached by the weight generator;
+    0 for hand-built tap sets), keying the plan per order.
     """
     rank = ops.ndim
+    if accuracy is None:
+        accuracy = getattr(ops, "accuracy", 0)
     radii = ops.radius_per_axis()
     if fuse_steps < 1:
         raise ValueError(f"fuse_steps must be >= 1, got {fuse_steps}")
@@ -493,6 +532,7 @@ def plan_stencil(
         unroll=int(unroll),
         fuse_steps=int(fuse_steps),
         batch=int(batch),
+        accuracy=int(accuracy),
     )
 
 

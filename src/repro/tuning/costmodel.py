@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.trafficmodel import (
     peak_hbm_bw,
     peak_mxu_flops,
+    peak_vpu_flops,
     stencil_batched_hbm_bytes_per_member_step,
     stencil_hbm_bytes_per_step,
     stencil_mxu_flops_per_step,
@@ -68,7 +69,39 @@ class Candidate:
 # (and on TPU: ~1 FLOP/byte stencil intensity vs ~100 machine balance),
 # so recomputed halo points cost far less than re-fetched ones; the
 # weight is the modeled compute-time share of a balanced fused kernel.
+# Calibration: the paper's 3-D order-6 diffusion step (38 flops/point,
+# 8 compulsory bytes/point, v5e peaks) gives
+# (38/24.625e12)/(8/819e9) ≈ 0.158 — which is what
+# :func:`temporal_compute_weight` reproduces from first principles for
+# any tap count when the caller supplies ``flops_per_point``; this
+# constant is the fixed fallback for hand-built operator sets that
+# don't report one.
 TEMPORAL_COMPUTE_WEIGHT = 0.15
+
+
+def temporal_compute_weight(
+    flops_per_point: float | None,
+    n_f: int,
+    n_out: int,
+    itemsize: int,
+    backend: str | None = None,
+) -> float:
+    """Per-order compute weight of the temporal score: the ratio of a
+    point's VPU time (``flops_per_point / peak_vpu``) to its compulsory
+    HBM time (``(n_f + n_out)·itemsize / peak_bw``) — the fraction of
+    the bandwidth roof one redundantly recomputed point costs.
+
+    This is how the operator's accuracy order reaches the strategy
+    ranking: an order-2 set (few taps) weighs halo recompute lightly
+    and fuses deep, an order-8 set (≈4× the taps) pays ≈4× more per
+    recomputed point and the model backs off the depth. Falls back to
+    :data:`TEMPORAL_COMPUTE_WEIGHT` when ``flops_per_point`` is None
+    (hand-built taps with no operator metadata).
+    """
+    if flops_per_point is None:
+        return TEMPORAL_COMPUTE_WEIGHT
+    hbm_time = (n_f + n_out) * itemsize / peak_hbm_bw(backend)
+    return (flops_per_point / peak_vpu_flops(backend)) / hbm_time
 
 
 def vmem_working_set(
@@ -159,6 +192,7 @@ def enumerate_candidates_nd(
     tc_groups: Sequence[int] | None = None,
     backend: str | None = None,
     batch: int = 1,
+    flops_per_point: float | None = None,
 ) -> list[Candidate]:
     """Generate, filter (divisibility + VMEM + the tiny-block guard),
     and rank (block, fuse_steps, stream) configurations for a
@@ -202,8 +236,18 @@ def enumerate_candidates_nd(
     8-byte dtypes (no f64 MXU path) and for tiles beyond
     ``TC_MAX_TILE`` on any axis (the contraction extent — and with it
     the per-point FLOPs — grows with the tile).
+
+    ``flops_per_point`` is the operator set's VPU work per grid point
+    (``OperatorSet.flops_per_point(n_f)`` — 2 FLOPs per tap per field):
+    when given, the temporal redundancy weight is derived from it per
+    order via :func:`temporal_compute_weight`, so ``strategy="auto"``
+    re-ranks depths as the tap count grows with the accuracy order;
+    when None the fixed :data:`TEMPORAL_COMPUTE_WEIGHT` applies.
     """
     domain = tuple(domain)
+    compute_weight = temporal_compute_weight(
+        flops_per_point, n_f, n_out, itemsize, backend
+    )
     rank = len(domain)
     if axis_options is None:
         axis_options = axis_tile_options(domain)
@@ -297,7 +341,7 @@ def enumerate_candidates_nd(
                 else:
                     score = (
                         traffic * pens
-                        + TEMPORAL_COMPUTE_WEIGHT * redundancy
+                        + compute_weight * redundancy
                     )
                 out.append(
                     Candidate(
@@ -354,6 +398,7 @@ def enumerate_cross_strategy_nd(
     tc_groups: Sequence[int] | None = None,
     backend: str | None = None,
     batch: int = 1,
+    flops_per_point: float | None = None,
 ) -> list[Candidate]:
     """The ``strategy="auto"`` candidate space: every ``swc``, (rank
     ≥ 2, ``stream_ok``) ``swc_stream`` and (f32/bf16, ``tc_ok``) ``tc``
@@ -374,7 +419,7 @@ def enumerate_cross_strategy_nd(
         stream_options=(False, True) if stream_ok else (False,),
         tc_options=(False, True) if tc_ok else (False,),
         tc_groups=tc_groups, backend=backend,
-        batch=batch,
+        batch=batch, flops_per_point=flops_per_point,
     )
     out = [hwc_candidate(domain, min(fuse_steps_options))] + cands
     out.sort(key=lambda c: (c.score, c.vmem_bytes))

@@ -243,12 +243,14 @@ def fused_nd_key(
     unroll: int = 1,
     fuse_steps: int | str = 1,
     batch: int = 1,
+    accuracy: int = 0,
 ) -> TuningKey:
     """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``).
 
     The strategy id — stream axis (``swc_stream`` → ``:sz`` at rank 3,
-    ``:sy`` at rank 2), unroll, ``fuse_steps`` and ensemble ``batch``
-    suffixes — comes from the plan layer's canonical ``strategy_sid``
+    ``:sy`` at rank 2), unroll, ``fuse_steps``, ensemble ``batch`` and
+    operator-order (``:o{A}``, non-default accuracy only) suffixes —
+    comes from the plan layer's canonical ``strategy_sid``
     derivation, so this mirror can never diverge from
     ``StencilPlan.strategy_id``; depth-1 and depth-2 problems cache
     separately, the joint block/depth search keys as ``:fauto``, and a
@@ -257,7 +259,7 @@ def fused_nd_key(
     from repro.kernels.plan import strategy_sid
 
     rank = len(domain)
-    sid = strategy_sid(strategy, rank, unroll, fuse_steps, batch)
+    sid = strategy_sid(strategy, rank, unroll, fuse_steps, batch, accuracy)
     return TuningKey(
         kernel=f"fused_stencil{rank}d",
         strategy=sid,
@@ -307,6 +309,7 @@ def fused_nd_candidates(
     tc: bool = False,
     tc_groups: Sequence[int] | None = None,
     batch: int = 1,
+    flops_per_point: float | None = None,
 ) -> list[Candidate]:
     """Structurally-ranked (block, fuse_steps) configurations for a
     rank-1/2/3 domain (``stream=True`` scores every candidate with the
@@ -326,6 +329,7 @@ def fused_nd_candidates(
         fuse_steps_options=fuse_steps_options,
         stream_options=stream_options, tc_options=tc_options,
         tc_groups=tc_groups, backend=backend, batch=batch,
+        flops_per_point=flops_per_point,
     )
     if cands:
         return cands
@@ -334,6 +338,7 @@ def fused_nd_candidates(
         fuse_steps_options=fuse_steps_options,
         stream_options=stream_options, tc_options=tc_options,
         tc_groups=tc_groups, backend=backend, batch=batch,
+        flops_per_point=flops_per_point,
     )
     if not unfiltered:
         return []
@@ -423,6 +428,7 @@ def auto_block_nd(
         tc=probe.strategy == "tc",
         tc_groups=tc_groups_per_axis(ops),
         batch=probe.batch,
+        flops_per_point=ops.flops_per_point(n_f),
     )
     if not cands:  # degenerate domain: let the planner clamp a default
         return DEFAULT_BLOCKS[rank]
@@ -514,6 +520,7 @@ def auto_fuse_nd(
     key = fused_nd_key(
         domain, radii, n_f, n_out, str(f_interior.dtype), strategy,
         fuse_steps="auto", batch=batch,
+        accuracy=getattr(ops, "accuracy", 0),
     )
     from repro.kernels.plan import tc_groups_per_axis
 
@@ -524,6 +531,7 @@ def auto_fuse_nd(
         tc=strategy == "tc",
         tc_groups=tc_groups_per_axis(ops),
         batch=batch,
+        flops_per_point=ops.flops_per_point(n_f),
     )
     if not cands:
         from repro.kernels.plan import DEFAULT_BLOCKS
@@ -721,6 +729,7 @@ def auto_strategy_nd(
         domain, radii, n_f, n_out, str(f_interior.dtype), "auto",
         fuse_steps=fuse_steps if fuse_steps == "auto" else depth_options[0],
         batch=batch,
+        accuracy=getattr(ops, "accuracy", 0),
     )
 
     from repro.kernels.plan import tc_groups_per_axis
@@ -733,6 +742,7 @@ def auto_strategy_nd(
         tc_groups=tc_groups_per_axis(ops),
         backend=current_backend(),
         batch=batch,
+        flops_per_point=ops.flops_per_point(n_f),
     )
     measure = None
     if _is_concrete(f_interior) and (aux is None or _is_concrete(aux)):
@@ -818,6 +828,7 @@ def lookup_fused_nd(
         unroll=unroll,
         fuse_steps=fuse_steps,
         batch=int(f_interior.shape[0]) if batched else 1,
+        accuracy=getattr(ops, "accuracy", 0),
     )
     return sess.cache.get(key)
 

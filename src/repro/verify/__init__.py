@@ -1,0 +1,15 @@
+"""Verification harnesses — correctness layers that gate the engine.
+
+``repro.verify.mms`` is the method-of-manufactured-solutions
+convergence harness: it drives analytically-known fields through
+:class:`~repro.core.fusion.FusedStencilOp` at every generated accuracy
+order, rank and boundary family, and fits the observed error slope
+against the nominal order — the acceptance gate for the generalized
+(Fornberg-weight) operator pipeline.
+"""
+from repro.verify.mms import (  # noqa: F401
+    MMSResult,
+    fit_slope,
+    manufactured_solution,
+    run_convergence,
+)

@@ -1,0 +1,195 @@
+"""Method-of-manufactured-solutions (MMS) convergence harness.
+
+Pick a smooth field f with a known Laplacian, evaluate the generated
+∇² operator through the SAME :class:`~repro.core.fusion.FusedStencilOp`
+pipeline production code uses (pad → lower → φ(A·B), any caching
+regime), and fit the slope of log(error) against log(h) over a grid
+refinement sweep. A correct order-A weight pipeline shows slope ≈ A;
+every systematic defect this PR's machinery could have — wrong Fornberg
+weights, a mis-scaled spacing, ghost cells contaminating wall cells,
+boundary-modified rows applied at the wrong offset — bends the slope
+away from nominal, which is why the fitted order (not a point-wise
+tolerance) is the acceptance gate.
+
+Manufactured fields:
+
+* ``periodic`` — f = ∏ₐ sin(xₐ + φₐ) on [0, 2π)ʳ (cell-indexed,
+  x_j = j·2π/n), so ∇²f = −rank·f exactly and the wrap IS the
+  continuation. Incommensurate phases keep every axis's error term
+  alive.
+* ``dirichlet`` — f = ∏ₐ sin(ωₐ xₐ + φₐ) on the vertex-centered unit
+  cube (h = 1/(n−1)); generic wall values, exercised with
+  ``boundary_weights=True`` so the wall cells run the offset
+  (one-sided) weight rows at full interior order.
+* ``neumann`` / ``neumann2`` — f = ∏ₐ cos(π xₐ) (zero normal gradient
+  at every wall), exercised through the ghost FILL itself
+  (``boundary_weights=False``): the edge-replicate ``neumann`` fill is
+  1st-order and caps the observed slope near the wall, the
+  mirror-about-node ``neumann2`` fill reproduces the even extension and
+  releases the interior order — the documented one-order gap the
+  regression suite asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import FusedStencilOp
+from repro.core.stencil import OperatorSet, laplacian_stencil
+
+# Incommensurate per-axis phases/frequencies: no axis's error term
+# cancels by symmetry, no two axes alias.
+_PHASES = (0.3, 1.1, 2.2)
+_FREQS = (1.7, 2.3, 1.3)
+
+# Default refinement sweeps per rank (coarse → fine). Chosen so f64
+# errors stay far above roundoff yet rank-3 sweeps stay cheap on CPU.
+# Order 8 converges so fast it hits the f64 floor (~1e-13 relative) by
+# n ≈ 48 — its sweep stays coarse on purpose; n = 12 still holds the
+# 10-point offset rows (deriv + accuracy samples).
+DEFAULT_NS = {
+    1: (32, 48, 64, 96),
+    2: (24, 32, 48, 64),
+    3: (16, 24, 32),
+}
+DEFAULT_NS_ORDER8 = {
+    1: (12, 16, 20, 24),
+    2: (12, 16, 20, 24),
+    3: (12, 16, 20),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MMSResult:
+    """One convergence sweep: the fitted slope and its evidence."""
+
+    rank: int
+    accuracy: int
+    boundary: str
+    dtype: str
+    strategy: str
+    boundary_weights: bool
+    ns: tuple[int, ...]
+    hs: tuple[float, ...]
+    errors: tuple[float, ...]  # normalized RMS per grid
+    slope: float  # fitted observed order
+    nominal: int  # the order the pipeline claims
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def fit_slope(hs: Sequence[float], errors: Sequence[float]) -> float:
+    """Least-squares slope of log(error) vs log(h) — the observed
+    convergence order. Grids whose error underflows to exact zero are
+    dropped (an exactly-reproduced solution carries no slope
+    information); returns ``inf`` when fewer than two informative
+    grids remain."""
+    pts = [
+        (np.log(h), np.log(e))
+        for h, e in zip(hs, errors)
+        if e > 0.0
+    ]
+    if len(pts) < 2:
+        return float("inf")
+    x, y = zip(*pts)
+    return float(np.polyfit(x, y, 1)[0])
+
+
+def manufactured_solution(
+    rank: int, boundary: str, n: int, dtype: str = "float64"
+) -> tuple[jnp.ndarray, jnp.ndarray, float]:
+    """The manufactured field and its exact Laplacian on an n-per-axis
+    grid: ``(f, lap_exact, h)`` with f of shape (1, *spatial).
+
+    See the module docstring for the per-boundary field families; all
+    axes share one extent ``n`` and one spacing ``h``.
+    """
+    if boundary == "periodic":
+        h = 2.0 * np.pi / n
+        x = np.arange(n) * h
+        axes = [np.sin(x + _PHASES[a]) for a in range(rank)]
+        f = _outer(axes)
+        lap = -float(rank) * f
+    elif boundary == "dirichlet":
+        h = 1.0 / (n - 1)
+        x = np.linspace(0.0, 1.0, n)
+        axes = [np.sin(_FREQS[a] * x + _PHASES[a]) for a in range(rank)]
+        f = _outer(axes)
+        lap = np.zeros_like(f)
+        for a in range(rank):
+            parts = list(axes)
+            parts[a] = -(_FREQS[a] ** 2) * parts[a]
+            lap += _outer(parts)
+    elif boundary in ("neumann", "neumann2"):
+        h = 1.0 / (n - 1)
+        x = np.linspace(0.0, 1.0, n)
+        axes = [np.cos(np.pi * x) for _ in range(rank)]
+        f = _outer(axes)
+        lap = -rank * np.pi**2 * f
+    else:
+        raise ValueError(
+            f"no manufactured solution for boundary {boundary!r}"
+        )
+    f = jnp.asarray(f[None], dtype=dtype)
+    lap = jnp.asarray(lap[None], dtype=dtype)
+    return f, lap, float(h)
+
+
+def _outer(axes_1d: Sequence[np.ndarray]) -> np.ndarray:
+    out = axes_1d[0]
+    for g in axes_1d[1:]:
+        out = np.multiply.outer(out, g)
+    return out
+
+
+def run_convergence(
+    rank: int,
+    accuracy: int,
+    boundary: str = "periodic",
+    *,
+    dtype: str = "float64",
+    strategy: str = "hwc",
+    ns: Sequence[int] | None = None,
+    boundary_weights: bool | None = None,
+) -> MMSResult:
+    """One refinement sweep of the generated ∇² at the given order.
+
+    ``boundary_weights`` defaults to True on ``dirichlet`` (the wall
+    cells must run the offset rows to see the interior order at all)
+    and False on the Neumann family (whose POINT is to measure the
+    ghost fill) and periodic (no walls). ``strategy`` selects the
+    caching regime the sweep lowers through — the harness goes through
+    ``FusedStencilOp`` precisely so a regression anywhere in the
+    pipeline (not just in the weights) bends the slope.
+    """
+    if ns is None:
+        ns = (DEFAULT_NS_ORDER8 if accuracy >= 8 else DEFAULT_NS)[rank]
+    if boundary_weights is None:
+        boundary_weights = boundary == "dirichlet"
+    hs, errors = [], []
+    for n in ns:
+        f, lap_exact, h = manufactured_solution(rank, boundary, n, dtype)
+        ops = OperatorSet(
+            (laplacian_stencil(rank, accuracy, spacing=h),)
+        )
+        op = FusedStencilOp(
+            ops, lambda d: d["lap"], n_out=1,
+            boundary_mode=boundary, strategy=strategy,
+            boundary_weights=boundary_weights,
+        )
+        out = op(f)
+        err = np.asarray(out - lap_exact, dtype=np.float64)
+        ref = np.sqrt(np.mean(np.asarray(lap_exact, np.float64) ** 2))
+        errors.append(float(np.sqrt(np.mean(err**2)) / ref))
+        hs.append(h)
+    return MMSResult(
+        rank=rank, accuracy=accuracy, boundary=boundary, dtype=dtype,
+        strategy=strategy, boundary_weights=bool(boundary_weights),
+        ns=tuple(int(n) for n in ns), hs=tuple(hs),
+        errors=tuple(errors),
+        slope=fit_slope(hs, errors), nominal=int(accuracy),
+    )

@@ -247,10 +247,12 @@ def test_tuning_key_stream_depth_uniqueness():
     plan2 = plan_stencil(
         opset2, f2.shape, 2, strategy="swc_stream", fuse_steps=2
     )
-    assert plan2.strategy_id == "swc_stream:sy:f2"
+    # _problem builds accuracy-4 opsets: the non-default order joins
+    # the id as the final :o4 suffix.
+    assert plan2.strategy_id == "swc_stream:sy:f2:o4"
     opset3, _, f3 = _problem(3, jnp.float32, 1)
     plan3 = plan_stencil(opset3, f3.shape, 2, strategy="swc_stream")
-    assert plan3.strategy_id == "swc_stream:sz"
+    assert plan3.strategy_id == "swc_stream:sz:o4"
 
 
 # --- traffic model + auto resolution -------------------------------------------

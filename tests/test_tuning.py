@@ -184,8 +184,10 @@ def test_auto_block_vmem_fallback(cache_dir):
     block = auto_block_nd(fp, opset, phi, 1, strategy="swc",
                           interpret=True, vmem_budget=64)
     assert sess_mod.MEASURE_COUNT == before  # no launches attempted
+    # _tiny_problem builds an accuracy-2 opset: the non-default order
+    # joins the strategy id as :o2.
     rec = TuningCache().get(
-        TuningKey("fused_stencil3d", "swc", (8, 8, 16), (r,) * 3, 2, 1,
+        TuningKey("fused_stencil3d", "swc:o2", (8, 8, 16), (r,) * 3, 2, 1,
                   "float32", sess_mod.current_backend())
     )
     assert rec is not None and rec.source == "fallback"
