@@ -6,16 +6,13 @@ cross-check between caching strategies mid-run.
 Run:  PYTHONPATH=src python examples/mhd_simulation.py          (~2 min)
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.physics.mhd import (  # noqa: E402
+from repro.physics.mhd import (
     AX, AZ, LNRHO, MHDParams, MHDSolver, SS, UX, UZ,
 )
 

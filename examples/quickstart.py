@@ -15,13 +15,10 @@ conv); skip it if you are here for the stencils.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-sys.path.insert(0, "src")
 
 
 def stencil_demo():

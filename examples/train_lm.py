@@ -8,24 +8,21 @@ Run:  PYTHONPATH=src python examples/train_lm.py          (~5-10 min CPU)
 """
 import argparse
 import dataclasses
-import sys
 import tempfile
 import time
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
-from repro.checkpoint import CheckpointManager  # noqa: E402
-from repro.configs.registry import get_config  # noqa: E402
-from repro.data import BatchIterator, MarkovLMDataset  # noqa: E402
-from repro.distrib import sharding as shlib  # noqa: E402
-from repro.ft import Supervisor  # noqa: E402
-from repro.launch.mesh import make_mesh  # noqa: E402
-from repro.launch.steps import jit_train_step  # noqa: E402
-from repro.models.config import ModelConfig  # noqa: E402
-from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data import BatchIterator, MarkovLMDataset
+from repro.distrib import sharding as shlib
+from repro.ft import Supervisor
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import jit_train_step
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
 
 
 def main() -> None:

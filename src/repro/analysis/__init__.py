@@ -1,0 +1,52 @@
+"""Static plan auditor: machine-checkable proofs about every lowerable
+:class:`~repro.kernels.plan.StencilPlan` — no kernels executed.
+
+Three finding families (see docs/analysis.md for the full story):
+
+* **bounds** (:mod:`repro.analysis.bounds`) — the plan's actual kernel
+  body is shadow-executed over an interval abstract domain
+  (:mod:`repro.analysis.shadow`): every load must stay inside the
+  staged window, every store inside (and exactly covering) the output
+  tile, scratch reads must be initialized, and the streaming kernel's
+  carried halo planes must hold exactly the global planes each chunk's
+  input window calls for.
+* **vmem** (:mod:`repro.analysis.vmem`) — the working set the shadow
+  run measures must match ``costmodel.vmem_working_set`` (the number
+  that steers candidate enumeration and the VMEM budget filter).
+* **key** (:mod:`repro.analysis.keys`) — ``strategy_sid`` is injective
+  over the exhaustive axis product modulo the one documented accuracy
+  alias, and ``plan_from_record`` is a left inverse of the persisted
+  tuning decision.
+
+``python -m repro.analysis`` audits the registered shape set plus the
+full cross-strategy candidate space and writes ``BENCH_audit.json``;
+``--mutants`` runs the seeded-defect harness
+(:mod:`repro.analysis.mutants`) proving the auditor detects each
+defect class.
+"""
+from repro.analysis.bounds import PlanAudit, audit_plan
+from repro.analysis.driver import run_audit, run_mutants
+from repro.analysis.findings import CLASSES, AuditError, Finding
+from repro.analysis.keys import (
+    audit_key_uniqueness,
+    audit_record_roundtrip,
+    audit_sid_injectivity,
+    parse_sid,
+)
+from repro.analysis.vmem import check_vmem, model_vmem
+
+__all__ = [
+    "AuditError",
+    "CLASSES",
+    "Finding",
+    "PlanAudit",
+    "audit_key_uniqueness",
+    "audit_plan",
+    "audit_record_roundtrip",
+    "audit_sid_injectivity",
+    "check_vmem",
+    "model_vmem",
+    "parse_sid",
+    "run_audit",
+    "run_mutants",
+]

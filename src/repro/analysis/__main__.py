@@ -1,0 +1,98 @@
+"""CLI for the static plan auditor.
+
+Usage::
+
+    python -m repro.analysis [--smoke|--full] [--json PATH]
+                             [--vmem-tol F] [--no-enumerate]
+    python -m repro.analysis --mutants [--json PATH]
+
+Exit status 0 iff the audit is finding-free (or, with ``--mutants``,
+every seeded defect class was detected). The JSON report schema is
+documented in docs/analysis.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.driver import (
+    run_audit,
+    run_mutants,
+    write_report,
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan auditor (bounds / VMEM / keys).",
+    )
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument(
+        "--smoke", action="store_true",
+        help="audit the smoke extents (default)",
+    )
+    mode.add_argument(
+        "--full", action="store_true",
+        help="audit the benchmark (full) extents",
+    )
+    mode.add_argument(
+        "--mutants", action="store_true",
+        help="run the seeded-defect mutation harness instead",
+    )
+    ap.add_argument(
+        "--json", default="BENCH_audit.json", metavar="PATH",
+        help="report path (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--vmem-tol", type=float, default=0.0, metavar="F",
+        help="relative tolerance for the VMEM fidelity check "
+        "(default: exact)",
+    )
+    ap.add_argument(
+        "--no-enumerate", action="store_true",
+        help="skip the cross-strategy candidate-space audit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.mutants:
+        report = run_mutants()
+        write_report(report, args.json)
+        for name, r in report["mutants"].items():
+            mark = "ok" if r["detected"] else "MISSED"
+            print(
+                f"  {mark:6s} {name}: {r['description']} -> "
+                f"{r['classes'] or ['no findings']}"
+            )
+        if report["undetected"]:
+            print(
+                f"UNDETECTED mutants: {', '.join(report['undetected'])}"
+            )
+            return 1
+        print(f"all {len(report['mutants'])} mutants detected")
+        return 0
+
+    report = run_audit(
+        full=args.full,
+        vmem_tol=args.vmem_tol,
+        enumerate_candidates=not args.no_enumerate,
+    )
+    write_report(report, args.json)
+    c = report["counts"]
+    print(
+        f"audited {c['registry_plans']} registry plans + "
+        f"{c['candidate_plans']} enumerated candidates; "
+        f"{c['sid_combos']} sid combos, "
+        f"{c['record_roundtrips']} record round-trips"
+    )
+    for f in report["findings"]:
+        print(f"  [{f['cls']}] {f['plan']}: {f['detail']}")
+    if report["findings"]:
+        print(f"{len(report['findings'])} findings -> {args.json}")
+        return 1
+    print(f"0 findings -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+"""Finding records for the static plan auditor.
+
+Every auditor check failure is a :class:`Finding` — a machine-checkable
+record (never a print) with a defect class drawn from the closed
+:data:`CLASSES` set, the strategy id / plan label it was proved
+against, and a human-readable detail string. ``python -m
+repro.analysis`` serializes the full list into ``BENCH_audit.json``
+and exits nonzero if any survive; the mutation harness
+(``repro.analysis.mutants``) asserts each class fires on its seeded
+defect.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+# The closed set of defect classes the auditor can prove. "bounds"
+# covers any access outside the staged window / valid store region
+# (including stream-carry provenance skew: initialized planes that
+# belong to the wrong global position are out-of-bounds in global
+# coordinates); "uninit" a read of never-written scratch; "vmem" a
+# divergence between the measured shadow working set and the cost
+# model; "key" a strategy-id/tuning-key collision or a
+# ``plan_from_record`` round-trip failure; "coverage" an output tile
+# not exactly covered by the kernel's stores; "phi" a sweep geometry
+# mismatch observed at a synthetic-φ call boundary.
+CLASSES = ("bounds", "uninit", "vmem", "key", "coverage", "phi")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    cls: str  # one of CLASSES
+    plan: str  # strategy id / label of the audited plan (or sid pair)
+    detail: str
+
+    def __post_init__(self) -> None:
+        if self.cls not in CLASSES:
+            raise ValueError(f"unknown finding class {self.cls!r}")
+
+    def to_json(self) -> dict[str, Any]:
+        return {"cls": self.cls, "plan": self.plan, "detail": self.detail}
+
+
+class AuditError(Exception):
+    """Raised inside a shadow kernel run when a proof obligation fails;
+    the audit driver converts it into a :class:`Finding` and moves on
+    to the next plan."""
+
+    def __init__(self, cls: str, detail: str):
+        super().__init__(f"[{cls}] {detail}")
+        self.cls = cls
+        self.detail = detail

@@ -264,6 +264,43 @@ class FusedStencilOp:
             self.boundary_mode, self.ops.ndim
         )
 
+    def lowering_plan(
+        self,
+        interior_shape: Sequence[int],
+        *,
+        n_aux: int = 0,
+        dtype: str = "float32",
+    ):
+        """The :class:`~repro.kernels.plan.StencilPlan` this op's
+        ``apply_padded`` lowers for an (unpadded) ``interior_shape``
+        field stack — ``(n_f, *spatial)`` or the batched
+        ``(batch, n_f, *spatial)``. ``None`` for the hwc regime (no
+        Pallas plan). Requires every lowering decision to be concrete
+        (``resolved()`` first) — the static auditor
+        (``repro.analysis``) drives this to audit exactly the plan a
+        call site will launch, without running it.
+        """
+        depth = self._depth_or_none()
+        if depth is None or self.strategy == "auto":
+            raise ValueError(
+                "lowering_plan needs a concrete strategy and "
+                "fuse_steps — resolve via op.resolved(f) first"
+            )
+        shape = tuple(interior_shape)
+        lead = len(shape) - self.ops.ndim
+        radii = self.radius_per_axis
+        padded = shape[:lead] + tuple(
+            n + 2 * r * depth for n, r in zip(shape[lead:], radii)
+        )
+        aux_shape = None
+        if n_aux:
+            aux_shape = shape[: lead - 1] + (n_aux,) + shape[lead:]
+        return kops.plan_for_nd(
+            self.ops, padded, self.n_out, aux_shape=aux_shape,
+            strategy=self.strategy, block=self.block, dtype=dtype,
+            fuse_steps=depth,
+        )
+
     # -- single device ------------------------------------------------------
 
     def resolved(

@@ -95,6 +95,31 @@ def _block_derivs(
     return out
 
 
+def _contract(window, band, axis: int):
+    """One banded contraction of ``window`` along spatial ``axis``
+    (``dot_general`` against the (ext+2r, ext) band, f32 accumulate,
+    output dim moved back where the contracted axis was).
+
+    This is the ONE data-dependent MXU op of the ``tc`` lowering, kept
+    behind an indirection so the static auditor (``repro.analysis``)
+    can thread its interval-domain shadow arrays through the kernel
+    body: a window that implements ``shadow_contract`` dispatches there
+    instead of running the matmul.
+    """
+    shadow = getattr(window, "shadow_contract", None)
+    if shadow is not None:
+        return shadow(band, axis)
+    term = jax.lax.dot_general(
+        window,
+        band,
+        dimension_numbers=(((1 + axis,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # dot_general appends the band's output dim last; put it back where
+    # the contracted axis was.
+    return jnp.moveaxis(term, -1, 1 + axis)
+
+
 def _tc_band(
     taps: tuple[tuple[int, float], ...],
     out_extent: int,
@@ -173,15 +198,7 @@ def _block_derivs_tc(
                     tuple(sorted(taps)), tile[axis], radii[axis],
                     fblk.dtype,
                 )
-                term = jax.lax.dot_general(
-                    fblk[sl],
-                    band,
-                    dimension_numbers=(((1 + axis,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32,
-                )
-                # dot_general appends the band's output dim last; put it
-                # back where the contracted axis was.
-                term = jnp.moveaxis(term, -1, 1 + axis)
+                term = _contract(fblk[sl], band, axis)
             acc = term if acc is None else acc + term
         out[spec.name] = acc.astype(fblk.dtype)
     return out
@@ -371,6 +388,56 @@ def _fused_batched(
     return out.reshape((b, plan.n_out) + plan.interior)
 
 
+def lowering_windows(plan: StencilPlan) -> dict[str, tuple[int, ...]]:
+    """Static per-grid-step extents of the pipelined lowering — the ONE
+    derivation shared by :func:`fused_stencil_pallas` (which turns them
+    into BlockSpecs) and the static auditor ``repro.analysis`` (which
+    instantiates shadow refs of exactly these shapes), so the audited
+    geometry can never diverge from the emitted one.
+
+    Returns spatial extents (no field axis): ``window`` — the staged
+    input block (halo-widened, x spanning all ``unroll`` sub-tiles);
+    ``out_tile`` — the output block; ``aux_window`` — the staged aux
+    block (``None`` for aux-free plans): halo-free at depth 1, widened
+    by ``r·(S-1)`` per axis at temporal depth ``S > 1``.
+    """
+    radii, tile = plan.radii, plan.block
+    window = tuple(
+        (plan.x_step if a == plan.rank - 1 else tile[a]) + 2 * h
+        for a, h in enumerate(plan.halo)
+    )
+    out_tile = tile[:-1] + (plan.x_step,)
+    aux_window: tuple[int, ...] | None = None
+    if plan.n_aux:
+        if plan.fuse_steps == 1:
+            aux_window = out_tile
+        else:
+            aux_window = tuple(
+                t + 2 * r * (plan.fuse_steps - 1)
+                for t, r in zip(tile, radii)
+            )
+    return {
+        "window": window, "out_tile": out_tile, "aux_window": aux_window,
+    }
+
+
+def stream_extents(plan: StencilPlan) -> dict[str, tuple[int, ...] | int]:
+    """Static scratch extents of the explicit-streaming lowering —
+    shared by :func:`_fused_stream` (VMEM scratch allocation) and the
+    auditor's shadow run, like :func:`lowering_windows` for the
+    pipelined path. Spatial extents only (``work``/``prefetch``/
+    ``outbuf``), plus the stream chunk count ``n_chunks``.
+    """
+    tile, halo = plan.block, plan.halo
+    cross = tuple(t + 2 * h for t, h in zip(tile[1:], halo[1:]))
+    return {
+        "work": (tile[0] + 2 * halo[0],) + cross,
+        "prefetch": (tile[0],) + cross,
+        "outbuf": tile,
+        "n_chunks": plan.interior[0] // tile[0],
+    }
+
+
 def _grid_and_maps(plan: StencilPlan):
     """Grid extents and (input, tile-indexed) index maps per rank.
 
@@ -451,11 +518,9 @@ def fused_stencil_pallas(
         )
 
     radii, tile = plan.radii, plan.block
-    window = tuple(
-        (plan.x_step if a == plan.rank - 1 else tile[a]) + 2 * h
-        for a, h in enumerate(plan.halo)
-    )
-    out_tile = plan.block[:-1] + (plan.x_step,)
+    windows = lowering_windows(plan)
+    window = windows["window"]
+    out_tile = windows["out_tile"]
     grid, in_map, tile_map = _grid_and_maps(plan)
     in_specs = [
         element_window_spec(
@@ -466,15 +531,12 @@ def fused_stencil_pallas(
     ]
     operands = [f_padded]
     if aux is not None:
+        aux_window = windows["aux_window"]
         if plan.fuse_steps == 1:
             in_specs.append(
-                pl.BlockSpec((plan.n_aux,) + out_tile, tile_map)
+                pl.BlockSpec((plan.n_aux,) + aux_window, tile_map)
             )
         else:
-            aux_window = tuple(
-                t + 2 * r * (plan.fuse_steps - 1)
-                for t, r in zip(tile, radii)
-            )
             in_specs.append(
                 element_window_spec(
                     (plan.n_aux,) + aux_window,
@@ -626,14 +688,13 @@ def _fused_stream(
     f_padded, ops, phis, plan: StencilPlan, *, interpret: bool = False
 ):
     """Lower an ``swc_stream`` plan (rank 2 or 3, any fuse depth)."""
-    tile, halo = plan.block, plan.halo
-    n_chunks = plan.interior[0] // tile[0]
+    tile = plan.block
+    ext = stream_extents(plan)
     dtype = f_padded.dtype
-    cross = tuple(t + 2 * h for t, h in zip(tile[1:], halo[1:]))
 
     kernel = functools.partial(
         _kernel_stream, ops=ops, radii=plan.radii, tile=tile,
-        phis=phis, n_chunks=n_chunks,
+        phis=phis, n_chunks=ext["n_chunks"],
     )
     return pl.pallas_call(
         kernel,
@@ -644,10 +705,10 @@ def _fused_stream(
             (plan.n_out,) + plan.interior, dtype
         ),
         scratch_shapes=[
-            pltpu.VMEM((plan.n_f, tile[0] + 2 * halo[0]) + cross, dtype),
-            pltpu.VMEM((plan.n_f, tile[0]) + cross, dtype),
-            pltpu.VMEM((plan.n_f, tile[0]) + cross, dtype),
-            pltpu.VMEM((plan.n_out,) + tile, dtype),
+            pltpu.VMEM((plan.n_f,) + ext["work"], dtype),
+            pltpu.VMEM((plan.n_f,) + ext["prefetch"], dtype),
+            pltpu.VMEM((plan.n_f,) + ext["prefetch"], dtype),
+            pltpu.VMEM((plan.n_out,) + ext["outbuf"], dtype),
             pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.DMA,
         ],

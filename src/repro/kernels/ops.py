@@ -27,8 +27,10 @@ from repro.core.stencil import OperatorSet
 from repro.kernels import ref as _ref
 from repro.kernels.conv1d_depthwise import conv1d_depthwise_pallas
 from repro.kernels.emit import fused_stencil_pallas
-from repro.kernels.plan import plan_stencil
-from repro.kernels.stencil1d import xcorr1d_pallas
+from repro.kernels.plan import StencilPlan, plan_stencil
+
+# ops.py IS the sanctioned facade over the legacy kernels.
+from repro.kernels.stencil1d import xcorr1d_pallas  # repolint: allow[legacy-kernel-import]
 
 
 def _default_interpret() -> bool:
@@ -169,16 +171,50 @@ def fused_stencil_nd(
             f_padded, ops, phi, n_out, aux=aux, strategy=strategy,
             unroll=unroll, fuse_steps=fuse_steps, interpret=interpret,
         )
-    n_aux = 0
-    if aux is not None:
-        n_aux = aux.shape[1] if batched else aux.shape[0]
-    plan = plan_stencil(
-        ops, f_padded.shape, n_out, strategy=strategy, block=block,
-        dtype=str(f_padded.dtype), n_aux=n_aux,
+    plan = plan_for_nd(
+        ops, f_padded.shape, n_out,
+        aux_shape=None if aux is None else aux.shape,
+        strategy=strategy, block=block, dtype=str(f_padded.dtype),
         unroll=unroll, fuse_steps=fuse_steps,
     )
     return fused_stencil_pallas(
         f_padded, ops, phi, plan, aux=aux, interpret=interpret
+    )
+
+
+def plan_for_nd(
+    ops: OperatorSet,
+    padded_shape: tuple[int, ...],
+    n_out: int,
+    *,
+    aux_shape: tuple[int, ...] | None = None,
+    strategy: str = "swc",
+    block: tuple[int, ...] | None = None,
+    dtype: str = "float32",
+    unroll: int = 1,
+    fuse_steps: int = 1,
+) -> StencilPlan | None:
+    """The :class:`StencilPlan` a :func:`fused_stencil_nd` call with
+    these arguments lowers through — the ONE construction shared by the
+    dispatch above and the static auditor (``repro.analysis``), so the
+    audited plan can never diverge from the launched one. ``None`` for
+    ``strategy="hwc"`` (no Pallas plan); ``block`` must be concrete
+    (resolve ``"auto"`` through the tuning session first)."""
+    if strategy == "hwc":
+        return None
+    if isinstance(block, str):
+        raise ValueError(
+            f"plan_for_nd needs a concrete block, got {block!r} — "
+            "resolve 'auto' via repro.tuning first"
+        )
+    n_aux = 0
+    if aux_shape is not None:
+        batched = len(padded_shape) == ops.ndim + 2
+        n_aux = aux_shape[1] if batched else aux_shape[0]
+    return plan_stencil(
+        ops, padded_shape, n_out, strategy=strategy, block=block,
+        dtype=dtype, n_aux=n_aux, unroll=unroll,
+        fuse_steps=fuse_steps,
     )
 
 

@@ -21,9 +21,12 @@ blocks follow the same order, e.g. (τz, τy, τx) at rank 3.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
-from repro.core.stencil import OperatorSet
+from repro.core.stencil import OperatorSet, StencilSpec
+
+if TYPE_CHECKING:
+    from repro.tuning.cache import TuningKey, TuningRecord
 
 STRATEGIES = ("swc", "swc_stream", "tc")
 
@@ -62,7 +65,7 @@ def largest_divisor_leq(n: int, cap: int) -> int:
 
 
 def tc_axis_groups(
-    spec, rank: int
+    spec: StencilSpec, rank: int
 ) -> dict[tuple[int, tuple[int, ...]], list[tuple[int, float]]]:
     """Decompose one stencil's taps into per-axis contraction groups —
     the lowering contract of the ``tc`` (matrix-unit) regime.
@@ -118,6 +121,7 @@ def strategy_sid(
     fuse_steps: int | str = 1,
     batch: int = 1,
     accuracy: int = 0,
+    n_aux: int = 0,
 ) -> str:
     """Canonical strategy-id derivation — the ONE place the stream
     axis, unroll factor, temporal depth, ensemble batch extent and
@@ -148,7 +152,15 @@ def strategy_sid(
     hand-built taps) key unmarked — the legacy id form, which keeps
     every pre-existing record and golden key valid; distinct orders
     still never collide because the per-axis radii (``accuracy/2``)
-    are part of every tuning key.
+    are part of every tuning key. The auditor
+    (``repro.analysis.keys``) proves this accuracy alias is the ONE
+    collision class the whole suffix grammar admits.
+
+    ``n_aux > 0`` appends ``:a{N}``: aux operands join the staged
+    working set (an extra halo-free — or, fused, ``r·(S-1)``-widened —
+    block per grid step), so a block tuned without the aux residency
+    must never be replayed for a call that carries it. Aux-free plans
+    key unmarked — the legacy form every pre-existing record uses.
     """
     sid = strategy
     if strategy == "swc_stream":
@@ -163,6 +175,8 @@ def strategy_sid(
         sid += f":f{fuse_steps}"
     if batch != 1:
         sid += f":b{batch}"
+    if n_aux:
+        sid += f":a{n_aux}"
     if accuracy not in (0, DEFAULT_ACCURACY):
         sid += f":o{accuracy}"
     return sid
@@ -237,7 +251,7 @@ class StencilPlan:
     # strategy_id as :o{A} for non-default orders (see strategy_sid).
     accuracy: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.accuracy < 0 or self.accuracy % 2:
             raise ValueError(
                 "accuracy must be 0 (unknown) or a positive even "
@@ -385,14 +399,15 @@ class StencilPlan:
         configuration, so they join the key (via :func:`strategy_sid`)
         — depth-1 and depth-2 plans cache separately, a y-streaming
         rank-2 plan (``swc_stream:sy``) never collides with a pipelined
-        one, a B-member ensemble plan keys as ``:b{B}``, and a
-        non-default operator order as ``:o{A}``."""
+        one, a B-member ensemble plan keys as ``:b{B}``, an aux-
+        carrying plan as ``:a{N}``, and a non-default operator order as
+        ``:o{A}``."""
         return strategy_sid(
             self.strategy, self.rank, self.unroll, self.fuse_steps,
-            self.batch, self.accuracy,
+            self.batch, self.accuracy, self.n_aux,
         )
 
-    def tuning_key(self, backend: str | None = None):
+    def tuning_key(self, backend: str | None = None) -> TuningKey:
         """The persistent-cache key for this plan's problem identity
         (block excluded — the block IS the tuned value)."""
         from repro.tuning.cache import TuningKey, current_backend
@@ -540,7 +555,7 @@ def plan_from_record(
     ops: OperatorSet,
     interior_shape: Sequence[int],
     n_out: int,
-    record,
+    record: TuningRecord,
     *,
     dtype: str = "float32",
     n_aux: int = 0,
@@ -551,17 +566,22 @@ def plan_from_record(
     ``interior_shape`` is the UNPADDED (n_f, *spatial) — or batched
     (batch, n_f, *spatial) — operand shape and
     ``record`` a :class:`~repro.tuning.cache.TuningRecord` whose
-    ``strategy_resolved``/``stream``/``block``/``fuse_steps`` fields
-    were persisted by the cross-strategy search. Returns ``None`` for a
-    record that resolved to ``hwc`` (the compiler-managed path has no
-    Pallas plan); otherwise the plan is built exactly as the kernel
-    dispatch would build it, so ``plan.strategy_id``/``tuning_key()``
-    round-trip the decision.
+    ``strategy_resolved``/``stream``/``block``/``fuse_steps``/
+    ``unroll`` fields were persisted by the cross-strategy search.
+    Returns ``None`` for a record that resolved to ``hwc`` (the
+    compiler-managed path has no Pallas plan); otherwise the plan is
+    built exactly as the kernel dispatch would build it, so
+    ``plan.strategy_id``/``tuning_key()`` round-trip the decision —
+    the left-inverse contract ``repro.analysis.keys`` audits per axis.
     """
     strategy = record.resolved_strategy
     if strategy == "hwc":
         return None
     depth = int(record.fuse_steps)
+    # Additive schema-v2 field: records persisted before the unroll
+    # axis was recorded lower with the factor they were keyed under
+    # (unroll joins the key as :u{N}, so an unmarked key pins 1).
+    unroll = int(getattr(record, "unroll", 1))
     radii = ops.radius_per_axis()
     lead = len(tuple(interior_shape)) - ops.ndim  # 1, or 2 when batched
     padded = tuple(interior_shape[:lead]) + tuple(
@@ -570,5 +590,5 @@ def plan_from_record(
     return plan_stencil(
         ops, padded, n_out, strategy=strategy,
         block=tuple(record.block), dtype=dtype, n_aux=n_aux,
-        fuse_steps=depth,
+        unroll=unroll, fuse_steps=depth,
     )

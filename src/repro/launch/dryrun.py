@@ -208,8 +208,8 @@ def analyze_cell(
     ):
         try:
             mem_info[attr] = int(getattr(mem, attr))
-        except Exception:
-            pass
+        except (AttributeError, TypeError, ValueError):
+            pass  # field absent on this backend's MemoryAnalysis
 
     n_params = cfg.n_params()
     n_active = cfg.n_active_params()

@@ -511,7 +511,7 @@ def _git_sha() -> str:
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
             check=True, timeout=10,
         ).stdout.strip()
-    except Exception:
+    except (OSError, subprocess.SubprocessError):
         return "unknown"
 
 

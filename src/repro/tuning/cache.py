@@ -26,14 +26,14 @@ import os
 import tempfile
 import time
 from pathlib import Path
-from typing import Union
+from typing import Iterator, Union
 
 log = logging.getLogger("repro.tuning")
 
 try:
     import fcntl
 except ImportError:  # non-posix: fall back to lock-free merge
-    fcntl = None
+    fcntl = None  # type: ignore[assignment]
 
 # v2: records gained ``stream`` + ``strategy_resolved`` (the explicit-
 # streaming flag and the strategy a cross-strategy "auto" search picked
@@ -132,6 +132,13 @@ class TuningRecord:
     # these known-bad candidates instead of re-launching them; the
     # field is additive, so pre-existing records parse with no failures.
     failed: dict[str, str] = dataclasses.field(default_factory=dict)
+    # Element-wise unroll factor of the winning configuration. Additive
+    # like ``failed``: the unroll axis always joined the KEY (:u{N}),
+    # but the record dropped it — so ``plan_from_record`` could not be
+    # a left inverse of ``StencilPlan.tuning_key`` for unrolled plans
+    # (the repro.analysis round-trip audit). Pre-existing records parse
+    # as unroll=1, matching their unmarked keys.
+    unroll: int = 1
 
     def to_json(self) -> dict:
         blk = list(self.block) if isinstance(self.block, tuple) else self.block
@@ -145,6 +152,7 @@ class TuningRecord:
             "stream": self.stream,
             "strategy_resolved": self.strategy_resolved,
             "failed": self.failed,
+            "unroll": self.unroll,
         }
 
     @classmethod
@@ -162,6 +170,7 @@ class TuningRecord:
             stream=bool(d.get("stream", False)),
             strategy_resolved=str(d.get("strategy_resolved", "")),
             failed=dict(d.get("failed", {})),
+            unroll=int(d.get("unroll", 1)),
         )
 
     @property
@@ -294,6 +303,7 @@ class TuningCache:
             with os.fdopen(fd, "w") as fh:
                 fh.write(payload)
             os.replace(tmp, self.file)
+        # repolint: allow[broad-except] — tmp-file cleanup, re-raised below
         except BaseException:
             try:
                 os.unlink(tmp)
@@ -312,7 +322,7 @@ class TuningCache:
         return self._records().get(key.cache_id)
 
     @contextlib.contextmanager
-    def _locked(self):
+    def _locked(self) -> Iterator[None]:
         """Advisory exclusive lock serializing read-merge-write cycles
         across processes (posix only; elsewhere the merge alone bounds
         the race to a re-measure)."""

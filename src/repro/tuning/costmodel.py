@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
 import math
 import time
 from typing import Callable, Iterable, Sequence
@@ -38,6 +39,8 @@ from repro.core.trafficmodel import (
     stencil_stream_hbm_bytes_per_step,
 )
 from repro.kernels.plan import TC_MAX_TILE
+
+log = logging.getLogger("repro.tuning")
 
 # Conservative per-core VMEM budget (bytes). v4/v5 expose ~16 MiB per
 # core to Pallas; we leave headroom for the output block + spills.
@@ -114,6 +117,8 @@ def vmem_working_set(
     stream: bool = False,
     *,
     batch: int = 1,
+    unroll: int = 1,
+    n_aux: int = 0,
 ) -> int:
     """VMEM footprint of one block, any rank. Temporal fusion widens
     the staged window to ``radii * fuse_steps`` and holds one
@@ -128,11 +133,25 @@ def vmem_working_set(
     major lowering stages all B members' field rows in one window, so
     every field-count term scales by B — which is why the batched
     candidate enumeration picks smaller blocks at larger B.
+
+    ``unroll`` is the element-wise unroll factor of a pipelined plan:
+    the staged window and output tile span all ``unroll`` x sub-tiles
+    per grid step (``τx·unroll + 2r`` / ``τx·unroll``), so an unrolled
+    block is NOT the footprint of its base block — before this term
+    the model under-counted unrolled plans by nearly ``unroll``×.
+    ``n_aux`` counts point-wise aux operands, staged (and, like every
+    pipelined input, double-buffered) as a halo-free tile at depth 1
+    and an ``r·(S-1)``-widened window at temporal depth S. Streaming
+    plans reject both (plan validation), so the kwargs are ignored for
+    ``stream=True``. The shapes here mirror
+    ``emit.lowering_windows``/``emit.stream_extents`` — the fidelity
+    contract ``repro.analysis.vmem`` checks per lowerable plan.
     """
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     n_f = n_f * batch
     n_out = n_out * batch
+    n_aux = n_aux * batch
     if stream:
         work, pf, mid, out = n_f, n_f, n_f if fuse_steps > 1 else 0, n_out
         for a, (t, r) in enumerate(zip(block, radii)):
@@ -141,15 +160,19 @@ def vmem_working_set(
             mid *= t + 2 * r * (fuse_steps - 1)
             out *= t
         return (work + 2 * pf + mid + out) * itemsize
+    last = len(tuple(block)) - 1
     inp = n_f
     mid = n_f if fuse_steps > 1 else 0
+    aux = n_aux
     out = n_out
-    for t, r in zip(block, radii):
-        inp *= t + 2 * r * fuse_steps
+    for a, (t, r) in enumerate(zip(block, radii)):
+        step = t * unroll if a == last else t
+        inp *= step + 2 * r * fuse_steps
         mid *= t + 2 * r * (fuse_steps - 1)
-        out *= t
-    # Pallas double-buffers pipelined blocks: 2x input.
-    return (2 * inp + mid + out) * itemsize
+        aux *= step if fuse_steps == 1 else t + 2 * r * (fuse_steps - 1)
+        out *= step
+    # Pallas double-buffers pipelined input blocks: 2x input (and aux).
+    return (2 * inp + 2 * aux + mid + out) * itemsize
 
 
 def halo_overhead(
@@ -584,7 +607,7 @@ def time_candidate(
     return float(np.median(ts))
 
 
-def _check_finite(out) -> None:
+def _check_finite(out: object) -> None:
     """Raise ``ValueError`` if any floating leaf of ``out`` contains
     NaN/inf (the candidate-output validation gate of
     :func:`time_candidate`)."""
@@ -622,8 +645,11 @@ def autotune(
         try:
             fn = make_fn(cand.block)
             t = time_candidate(fn, warmup=warmup, iters=iters)
-        except Exception:
-            continue  # discarded launch
+        except Exception as e:
+            # The paper's discarded launch: log which candidate died
+            # and why, then keep ranking the rest.
+            log.debug("autotune candidate %s discarded: %s", cand.block, e)
+            continue
         timings[cand.block] = t
         if best is None or t < best[0]:
             best = (t, cand)

@@ -190,6 +190,7 @@ def _candidate_record(
         fuse_steps=getattr(cand, "fuse_steps", 1),
         stream=getattr(cand, "stream", False),
         strategy_resolved=getattr(cand, "strategy", ""),
+        unroll=getattr(cand, "unroll", 1),
     )
 
 
@@ -244,22 +245,28 @@ def fused_nd_key(
     fuse_steps: int | str = 1,
     batch: int = 1,
     accuracy: int = 0,
+    n_aux: int = 0,
 ) -> TuningKey:
     """Plan-identity tuning key (mirrors ``StencilPlan.tuning_key``).
 
     The strategy id — stream axis (``swc_stream`` → ``:sz`` at rank 3,
-    ``:sy`` at rank 2), unroll, ``fuse_steps``, ensemble ``batch`` and
-    operator-order (``:o{A}``, non-default accuracy only) suffixes —
+    ``:sy`` at rank 2), unroll, ``fuse_steps``, ensemble ``batch``,
+    aux-operand (``:a{N}``, aux-carrying plans only) and operator-order
+    (``:o{A}``, non-default accuracy only) suffixes —
     comes from the plan layer's canonical ``strategy_sid``
     derivation, so this mirror can never diverge from
     ``StencilPlan.strategy_id``; depth-1 and depth-2 problems cache
     separately, the joint block/depth search keys as ``:fauto``, and a
-    B-member ensemble problem keys as ``:b{B}``.
+    B-member ensemble problem keys as ``:b{B}``. The plan→key
+    injectivity of the whole derivation is audited by
+    ``repro.analysis.keys``.
     """
     from repro.kernels.plan import strategy_sid
 
     rank = len(domain)
-    sid = strategy_sid(strategy, rank, unroll, fuse_steps, batch, accuracy)
+    sid = strategy_sid(
+        strategy, rank, unroll, fuse_steps, batch, accuracy, n_aux
+    )
     return TuningKey(
         kernel=f"fused_stencil{rank}d",
         strategy=sid,
@@ -440,7 +447,7 @@ def auto_block_nd(
         if rec is None:
             rec = TuningRecord(
                 block=cands[0].block, timings_us={}, source="fallback",
-                fuse_steps=fuse_steps,
+                fuse_steps=fuse_steps, unroll=probe.unroll,
             )
             sess.cache.put(key, rec)
         return tuple(rec.block)
@@ -465,6 +472,13 @@ def auto_block_nd(
             )
 
     record = sess.tune(key, cands, measure)
+    if record.unroll != probe.unroll:
+        # Candidate objects don't carry the (fixed) unroll factor of
+        # this search; stamp the planner-degraded value on the record
+        # so ``plan_from_record`` round-trips ``:u{N}``-keyed records
+        # (the repro.analysis left-inverse audit).
+        record.unroll = probe.unroll
+        sess.cache.put(key, record)
     return tuple(record.block)
 
 
@@ -520,7 +534,7 @@ def auto_fuse_nd(
     key = fused_nd_key(
         domain, radii, n_f, n_out, str(f_interior.dtype), strategy,
         fuse_steps="auto", batch=batch,
-        accuracy=getattr(ops, "accuracy", 0),
+        accuracy=getattr(ops, "accuracy", 0), n_aux=n_aux,
     )
     from repro.kernels.plan import tc_groups_per_axis
 
@@ -729,7 +743,7 @@ def auto_strategy_nd(
         domain, radii, n_f, n_out, str(f_interior.dtype), "auto",
         fuse_steps=fuse_steps if fuse_steps == "auto" else depth_options[0],
         batch=batch,
-        accuracy=getattr(ops, "accuracy", 0),
+        accuracy=getattr(ops, "accuracy", 0), n_aux=n_aux,
     )
 
     from repro.kernels.plan import tc_groups_per_axis
@@ -808,13 +822,15 @@ def lookup_fused_nd(
     session: TuningSession | None = None,
     unroll: int = 1,
     fuse_steps: int | str = 1,
+    n_aux: int = 0,
 ) -> TuningRecord | None:
     """Cached record for a fused stencil call on an UNPADDED field
     stack (n_f, *spatial) — or batched (batch, n_f, *spatial), keying
     as ``:b{B}`` — the read-only mirror of the key derivation in
     ``auto_block_nd``/``auto_fuse_nd``, for benchmarks/examples that
     want to report which configuration ``"auto"`` resolved to. Pass
-    ``fuse_steps="auto"`` to look up a joint block/depth record."""
+    ``fuse_steps="auto"`` to look up a joint block/depth record, and
+    ``n_aux`` for an aux-carrying (``:a{N}``-keyed) call."""
     sess = session if session is not None else default_session()
     batched = f_interior.ndim == ops.ndim + 2
     lead = 2 if batched else 1
@@ -829,6 +845,7 @@ def lookup_fused_nd(
         fuse_steps=fuse_steps,
         batch=int(f_interior.shape[0]) if batched else 1,
         accuracy=getattr(ops, "accuracy", 0),
+        n_aux=n_aux,
     )
     return sess.cache.get(key)
 

@@ -167,6 +167,130 @@ def warm_model_kernels(cfg, batch: int, seq_len: int, dtype=None) -> int:
     return 1
 
 
+# ---------------------------------------------------------------------------
+# Static-audit shapes (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditShape:
+    """One declarative entry of the static-audit registry: the auditor
+    builds every valid plan in the cross product of the listed axes
+    (strategies × fuse × unroll × batch) over this problem identity and
+    proves bounds/coverage/VMEM/key obligations for each — no kernels
+    run. ``smoke`` mirrors the warm registry's smoke extents;
+    ``full`` its benchmark extents (``python -m repro.analysis
+    --full``). ``accuracy=0`` selects the hand-built cross-correlation
+    tap set instead of generated central differences."""
+
+    name: str
+    ndim: int
+    accuracy: int
+    smoke: tuple[int, ...]
+    full: tuple[int, ...]
+    n_f: int = 1
+    n_out: int = 1
+    n_aux: int = 0
+    dtype: str = "float32"
+    strategies: tuple[str, ...] = ("swc",)
+    fuse: tuple[int, ...] = (1,)
+    unroll: tuple[int, ...] = (1,)
+    batch: tuple[int, ...] = (1,)
+
+    def operator_set(self):
+        import numpy as _np
+
+        from repro.core.stencil import (
+            derivative_operator_set,
+            xcorr_operator_set,
+        )
+
+        if self.accuracy == 0:
+            g = _np.arange(1, 2 * 32 + 2, dtype=_np.float64)
+            return xcorr_operator_set(g, self.ndim)
+        return derivative_operator_set(self.ndim, self.accuracy)
+
+    def plans(self, domain: tuple[int, ...]):
+        """Yield every valid (plan, ops) over this entry's axis
+        product at the given interior extents (invalid combinations —
+        the same constraints ``StencilPlan`` enforces — are skipped,
+        not errors)."""
+        import itertools
+
+        from repro.kernels.plan import plan_stencil
+
+        ops = self.operator_set()
+        radii = ops.radius_per_axis()
+        for s, f, u, b in itertools.product(
+            self.strategies, self.fuse, self.unroll, self.batch
+        ):
+            if s == "swc_stream" and (
+                self.ndim == 1 or self.n_aux or u != 1
+            ):
+                continue
+            if s == "tc" and (
+                u != 1 or self.dtype not in ("float32", "bfloat16")
+            ):
+                continue
+            if u != 1 and f != 1:
+                continue
+            if f > 1 and self.n_out != self.n_f + self.n_aux:
+                continue
+            if b > 1 and self.n_aux and f > 1:
+                continue
+            padded = tuple(
+                n + 2 * r * f for n, r in zip(domain, radii)
+            )
+            lead = (b,) if b > 1 else ()
+            yield plan_stencil(
+                ops, lead + (self.n_f,) + padded, self.n_out,
+                strategy=s, dtype=self.dtype, n_aux=self.n_aux,
+                unroll=u, fuse_steps=f,
+            ), ops
+
+
+# Mirrors the warm registry above (same figures, same smoke/full
+# extents) plus the axes only the auditor sweeps today (unroll > 1,
+# aux carries, batch 2). Every lowerable strategy appears at every
+# rank it supports.
+AUDIT_SHAPES: tuple[AuditShape, ...] = (
+    AuditShape(
+        "fig11/diffusion3d", 3, 2, (32, 32, 64), (256, 256, 256),
+        strategies=("swc", "swc_stream", "tc"), fuse=(1, 2),
+    ),
+    AuditShape(
+        "fig11/diffusion3d_o6", 3, 6, (32, 32, 64), (256, 256, 256),
+        strategies=("swc", "swc_stream", "tc"), fuse=(1, 2),
+    ),
+    AuditShape(
+        "fig11/diffusion1d", 1, 6, (1 << 14,), (1 << 22,),
+        strategies=("swc", "tc"), fuse=(1, 2), unroll=(1, 2),
+    ),
+    AuditShape(
+        "fig11/diffusion2d", 2, 6, (64, 128), (2048, 2048),
+        strategies=("swc", "swc_stream", "tc"), fuse=(1, 2, 3),
+        unroll=(1, 2), batch=(1, 2, 4),
+    ),
+    AuditShape(
+        "fig13-14/mhd8f", 3, 6, (16, 16, 64), (64, 64, 64),
+        n_f=8, n_out=8, strategies=("swc", "swc_stream", "tc"),
+    ),
+    AuditShape(
+        "engine/rk-aux-carry", 2, 6, (64, 128), (2048, 2048),
+        n_f=1, n_out=2, n_aux=1, strategies=("swc", "tc"),
+        fuse=(1, 2),
+    ),
+    AuditShape(
+        "fig07-09/xcorr1d-r32", 1, 0, (1 << 14,), (1 << 22,),
+        strategies=("swc",), unroll=(1, 2),
+    ),
+    AuditShape(
+        "fig11/diffusion2d_bf16", 2, 6, (64, 128), (2048, 2048),
+        dtype="bfloat16", strategies=("swc", "tc"),
+    ),
+)
+
+
 REGISTRY: tuple[WarmEntry, ...] = (
     WarmEntry("fig11/diffusion3d_swc", _warm_diffusion3d),
     WarmEntry("fig11/diffusion1d2d_swc", _warm_diffusion_lowdim),

@@ -10,7 +10,8 @@ import pytest
 
 from repro.core.stencil import derivative_operator_set
 from repro.kernels import ops as kops
-from repro.kernels.stencil3d import fused_stencil3d_pallas
+# Deprecation tests target the legacy module itself by design.
+from repro.kernels.stencil3d import fused_stencil3d_pallas  # repolint: allow[legacy-kernel-import]
 from repro.tuning import (
     auto_block_3d,
     domain_axis_options,
